@@ -1,0 +1,107 @@
+"""Shared benchmark infrastructure: the trained 'vehicle' models.
+
+Two small models (checkpoint-cached under experiments/vehicles/):
+  * induction vehicle — 4-layer llama-family tiny on the copy task
+    (accuracy vehicle for Tables 2/3/5 analogs),
+  * lm vehicle — same family on the Zipf–Markov corpus (perplexity vehicle
+    for the Table 4 analog).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import ZipfMarkov, induction_batch, induction_loader, lm_loader
+from repro.models.transformer import RuntimeOpts, forward_train, init_params
+from repro.serving.engine import Engine
+from repro.serving.split_engine import SplitEngine
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, train
+
+OPTS = RuntimeOpts(q_chunk=64, kv_chunk=64, remat=False, moe_capacity_factor=0.0)
+VEHICLE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "vehicles")
+VOCAB = 64
+SEQ = 33
+HALF = 16
+NUM_BLOCKS = 4
+
+
+def vehicle_config():
+    return dataclasses.replace(get_config("llama2-7b").tiny(), vocab_size=VOCAB,
+                               num_blocks=NUM_BLOCKS)
+
+
+def _get_vehicle(kind: str, steps: int = 250):
+    cfg = vehicle_config()
+    path = os.path.join(VEHICLE_DIR, kind)
+    template = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    template = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), template)
+    if os.path.exists(os.path.join(path, "meta.msgpack")):
+        params, _ = restore_checkpoint(path, template)
+        return cfg, params
+    if kind == "induction":
+        loader = induction_loader(VOCAB, batch=32, seq=SEQ, num_batches=steps)
+    else:
+        loader = lm_loader(ZipfMarkov(VOCAB, branching=4, seed=0), batch=32,
+                           seq=SEQ, num_batches=steps)
+    tc = TrainConfig(AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps))
+    params, _, _ = train(cfg, loader, tc, OPTS, log_every=10 ** 9)
+    save_checkpoint(path, params)
+    return cfg, params
+
+
+def induction_vehicle():
+    return _get_vehicle("induction")
+
+
+def lm_vehicle():
+    return _get_vehicle("lm")
+
+
+def copy_prompts(n: int = 16, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    prompts, _ = induction_batch(rng, n, SEQ, VOCAB)
+    return prompts.astype(np.int32)
+
+
+def copy_accuracy_engine(engine: Engine, prompts: np.ndarray) -> float:
+    out = engine.generate(prompts[:, : HALF + 1], HALF).tokens
+    return float(np.mean(out[:, HALF + 1 :] == prompts[:, :HALF]))
+
+
+def copy_accuracy_split(engine: SplitEngine, prompts: np.ndarray) -> float:
+    out, _ = engine.generate(prompts[:, : HALF + 1], HALF)
+    return float(np.mean(out[:, HALF + 1 : 2 * HALF + 1] == prompts[:, :HALF]))
+
+
+def perplexity(cfg, params, opts: RuntimeOpts, n_batches: int = 4,
+               seed: int = 123) -> float:
+    corpus = ZipfMarkov(VOCAB, branching=4, seed=0)
+    rng = np.random.default_rng(seed)
+    nll, count = 0.0, 0
+    fwd = jax.jit(lambda p, t: forward_train(p, cfg, t, None, opts)[0])
+    for _ in range(n_batches):
+        tokens = jnp.asarray(corpus.sample(rng, 16, SEQ), jnp.int32)
+        logits = fwd(params, tokens)
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32))
+        tgt = tokens[:, 1:]
+        nll += float(-jnp.sum(jnp.take_along_axis(lp, tgt[..., None], -1)))
+        count += tgt.size
+    return float(np.exp(nll / count))
+
+
+def timeit_us(fn, n: int = 5) -> float:
+    fn()  # warm
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n * 1e6

@@ -1,0 +1,50 @@
+"""Whole-model weight-quantization transforms for the Table 2/3 baselines
+(SmoothQuant/OmniQuant/Atom lite re-implementations from repro.core.quant),
+applied to stacked block parameters (fake-quant semantics)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (atom_lite, dequant_atom, omniquant_lite,
+                              quantize_sym, smoothquant_lite)
+
+
+def _map_matrices(blocks, fn):
+    """Apply ``fn(w2d) -> w2d`` to every stacked weight matrix (nb, din, dout)."""
+
+    def apply(x):
+        if x.ndim < 3:
+            return x
+        flat = x.reshape(-1, x.shape[-2], x.shape[-1])
+        out = jnp.stack([fn(flat[i]) for i in range(flat.shape[0])])
+        return out.reshape(x.shape)
+
+    return jax.tree_util.tree_map(apply, blocks)
+
+
+def quantize_blocks(params: dict, method: str, bits: int = 4) -> dict:
+    """Return params with ALL block weights fake-quantized by ``method``
+    (uniform whole-model quantization — what the baselines do)."""
+
+    def smooth(w):
+        act_absmax = jnp.ones((w.shape[0],))  # calibration-free proxy
+        qt, s = smoothquant_lite(w, act_absmax, bits)
+        return qt.dequantize(w.dtype) / s[:, None]
+
+    def omni(w):
+        return omniquant_lite(w, bits).dequantize(w.dtype)
+
+    def atom(w):
+        q_low, q_out, mask = atom_lite(w, bits_low=bits)
+        return dequant_atom(q_low, q_out, mask).astype(w.dtype)
+
+    def plain(w):
+        return quantize_sym(w, bits, axis=-1).dequantize(w.dtype)
+
+    fn = {"smoothquant": smooth, "omniquant": omni, "atom": atom,
+          "plain": plain}[method]
+    out = dict(params)
+    out["blocks"] = _map_matrices(params["blocks"], fn)
+    return out

@@ -1,0 +1,74 @@
+"""Roofline report: aggregate the dry-run JSONs into benchmark rows and the
+EXPERIMENTS.md §Roofline table. ``us_per_call`` = modeled step time (the max
+of the three roofline terms, in µs); ``derived`` = dominant term + terms."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = None) -> list:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def bench_roofline():
+    rows = []
+    for r in load_records():
+        if r["status"] == "skipped":
+            rows.append((f"roofline/{r['tag']}", 0.0, "skipped"))
+            continue
+        if r["status"] != "ok":
+            rows.append((f"roofline/{r['tag']}", 0.0, f"ERROR"))
+            continue
+        rl = r["roofline"]
+        step_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        rows.append((
+            f"roofline/{r['tag']}",
+            step_s * 1e6,
+            f"dom={rl['dominant']}_c={rl['compute_s']:.2e}_m={rl['memory_s']:.2e}"
+            f"_x={rl['collective_s']:.2e}_useful={rl['useful_flops_ratio']:.2f}",
+        ))
+    if not rows:
+        rows.append(("roofline/none", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows
+
+
+def markdown_table(mesh: str = "pod256") -> str:
+    """EXPERIMENTS.md §Roofline source table."""
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | HBM GiB/dev (args+tmp) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['tag'].split('__')[0]} | {r['tag'].split('__')[1]}"
+                         f" | — | — | — | skipped (full attention @500k) | — | — |")
+            continue
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        gib = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"**{rl['dominant']}** | {rl['useful_flops_ratio']:.2f} | {gib:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,65 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,tab2] [--list]
+
+Prints ``name,us_per_call,derived`` CSV (plus a roofline section aggregated
+from experiments/dryrun). Vehicle models are trained once and checkpointed
+under experiments/vehicles/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _registry():
+    from benchmarks import paper_benchmarks as pb
+    from benchmarks.roofline_report import bench_roofline
+
+    return {
+        "fig5": pb.bench_fig5_server_scaling,
+        "fig6": pb.bench_fig6_payload_size,
+        "fig7": pb.bench_fig7_ts_ratio,
+        "tab2": pb.bench_table2_split_accuracy,
+        "tab3": pb.bench_table3_method_comparison,
+        "tab4": pb.bench_table4_front_vs_back_ppl,
+        "tab5": pb.bench_table5_ablation,
+        "kernels": pb.bench_kernels,
+        "roofline": bench_roofline,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark keys")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    registry = _registry()
+    if args.list:
+        print("\n".join(registry))
+        return
+    keys = args.only.split(",") if args.only else list(registry)
+    print("name,us_per_call,derived")
+    failures = []
+    for key in keys:
+        t0 = time.time()
+        try:
+            rows = registry[key]()
+        except Exception as e:  # keep the harness running; report at the end
+            failures.append((key, repr(e)))
+            print(f"{key}/ERROR,0,{type(e).__name__}", flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"# {key} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        for k, e in failures:
+            print(f"# FAILED {k}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Architecture registry: importing this package registers every config."""
+
+from repro.configs import (gemma2_2b, granite_34b, h2o_danube3_4b,  # noqa: F401
+                           internlm2_20b, jamba_52b, llama2, mamba2_780m,
+                           musicgen_medium, qwen2_moe_a27b, qwen2_vl_2b,
+                           qwen3_moe_235b)
+from repro.configs.base import (ArchConfig, AttnSpec, LayerSpec, MLPSpec,  # noqa: F401
+                                MoESpec, SSMSpec, get_config, list_configs)
+
+ASSIGNED = [
+    "gemma2-2b",
+    "qwen2-vl-2b",
+    "qwen3-moe-235b-a22b",
+    "qwen2-moe-a2.7b",
+    "h2o-danube-3-4b",
+    "granite-34b",
+    "mamba2-780m",
+    "musicgen-medium",
+    "jamba-v0.1-52b",
+    "internlm2-20b",
+]

@@ -1,0 +1,21 @@
+"""Core algorithms from the paper: OPSC, TS, TAB-Q, channel model, unified
+split optimization, early exit, and the stage-boundary payload codec."""
+
+from repro.core.channel import (ChannelConfig, LatencyModel, g, optimal_rate,
+                                outage_probability, worst_case_latency)
+from repro.core.early_exit import (EarlyExitController, EarlyExitDecision,
+                                   default_payload_bits_fn)
+from repro.core.opsc import (OPSCConfig, edge_weight_memory_bytes,
+                             kv_cache_bytes, payload_bytes,
+                             quantize_front_params, ssm_state_bytes,
+                             weight_memory_bytes)
+from repro.core.payload import Payload, decode, encode, encode_decode_ste
+from repro.core.quant import (QuantizedTensor, aiq, aiq_dequant, atom_lite,
+                              omniquant_lite, pack_int4, quantize_groupwise,
+                              quantize_sym, smoothquant_lite, unpack_int4)
+from repro.core.split_optimizer import (SplitSearchSpace, SplitSolution,
+                                        optimize_split, psi)
+from repro.core.tabq import TabQResult, tabq, tabq_fixed
+from repro.core.ts import SparseAbove, reconstruct, split_dense, ts_decode, ts_encode
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,143 @@
+"""OPSC — One-Point Split Compression (paper §2.1-2.2, Eq. 1-3).
+
+Analytical memory/payload models parameterized by an architecture config,
+plus the weight-quantization transform that realizes OPSC on a parameter
+pytree (front blocks at Q_w1 bits, back blocks at Q_w2 bits).
+
+Conventions (match the paper's Table 1):
+  w       — current token index / sequence length generated so far
+  ℓ (ell) — split layer: layers 1..ℓ on the edge, ℓ+1..L on the cloud
+  Q^w     — {Q_w1 front, Q_w2 back} weight bits
+  Q^a     — {Q_a1 front, Q_a2 back} activation (KV-cache / payload) bits
+  I_kv    — 1: transmit KV cache, 0: transmit only the hidden state
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class OPSCConfig:
+    split_layer: int  # ℓ_w
+    qw_front: int = 4  # Q_w1
+    qw_back: int = 16  # Q_w2 (cloud side typically keeps high precision)
+    qa_front: int = 4  # Q_a1
+    qa_back: int = 16  # Q_a2
+    i_kv: int = 1
+    tau: float = 5.0  # TS threshold (paper default)
+    delta: float = 0.2  # TAB-Q distortion tolerance (paper default)
+    max_act_bits: int = 8  # Q̄_a
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1): weight memory of the two segments
+# ---------------------------------------------------------------------------
+
+
+def weight_memory_bytes(layer_param_counts, ell: int, qw_front: int, qw_back: int) -> int:
+    """M(ℓ_w, Q^w) = Σ_{i≤ℓ} B_w(i;Q_w1) + Σ_{j>ℓ} B_w(j;Q_w2)  [bytes].
+
+    ``layer_param_counts``: per-layer parameter counts, len L (embeddings /
+    head counted by the caller at the precision of the segment they sit in).
+    """
+    front = sum(layer_param_counts[:ell]) * qw_front
+    back = sum(layer_param_counts[ell:]) * qw_back
+    return (front + back) // 8
+
+
+def edge_weight_memory_bytes(layer_param_counts, ell: int, qw_front: int,
+                             embed_params: int = 0) -> int:
+    """Bytes the *edge device* must hold: front segment + embedding table."""
+    return (sum(layer_param_counts[:ell]) + embed_params) * qw_front // 8
+
+
+# ---------------------------------------------------------------------------
+# Eq. (2): KV-cache memory as the sequence grows
+# ---------------------------------------------------------------------------
+
+
+def activation_bits_per_layer(num_layers: int, ell: int, qa_front: int, qa_back: int):
+    """Q_{a,k} per the paper: Q_a1 for k < ℓ_w, Q_a2 for k ≥ ℓ_w."""
+    return [qa_front if k < ell else qa_back for k in range(num_layers)]
+
+
+def kv_cache_bytes(w: int, ell: int, num_layers: int, heads_dim: int,
+                   qa_front: int, qa_back: int) -> int:
+    """B_kv(w, ℓ; Q^a), Eq. (2)  [bytes].
+
+    heads_dim = H·D (for GQA this is kv_heads · head_dim — the actual cached
+    width; the paper's dense-MHA formula is the special case kv_heads = H).
+
+      2·Σ_{k≤ℓ} T_w·Q_{a,k}  +  2·Σ_{k>ℓ} T_{w-1}·Q_{a,k}  +  H·D·Q_{a,ℓ}
+    with T_w = w·H·D.
+    """
+    qa = activation_bits_per_layer(num_layers, ell, qa_front, qa_back)
+    t_w = w * heads_dim
+    t_wm1 = (w - 1) * heads_dim
+    bits = 2 * sum(t_w * qa[k] for k in range(ell))
+    bits += 2 * sum(t_wm1 * qa[k] for k in range(ell, num_layers))
+    bits += heads_dim * qa[min(ell, num_layers - 1)]
+    return bits // 8
+
+
+def ssm_state_bytes(num_ssm_layers: int, state_elems: int, qa_bits: int) -> int:
+    """Degenerate Eq. (2) for SSM/hybrid layers: the 'cache' is a fixed-size
+    recurrent state (constant in w) — see DESIGN.md §Arch-applicability."""
+    return num_ssm_layers * state_elems * qa_bits // 8
+
+
+# ---------------------------------------------------------------------------
+# Eq. (3): intermediate payload crossing the split
+# ---------------------------------------------------------------------------
+
+
+def payload_bytes(w: int, ell: int, num_layers: int, heads_dim: int, hidden_dim: int,
+                  qa_front: int, qa_back: int, i_kv: int) -> int:
+    """B_io(w, ℓ, I_kv; Q^a), Eq. (3)  [bytes].
+
+    I_kv = 1 → ship the KV cache (B_kv);  I_kv = 0 → ship only the split-layer
+    hidden state T_w at Q_{a,ℓ} bits (hidden width = d_model)."""
+    if i_kv:
+        return kv_cache_bytes(w, ell, num_layers, heads_dim, qa_front, qa_back)
+    qa = activation_bits_per_layer(num_layers, ell, qa_front, qa_back)
+    return w * hidden_dim * qa[min(ell, num_layers - 1)] // 8
+
+
+# ---------------------------------------------------------------------------
+# OPSC applied to a parameter pytree (front blocks quantized)
+# ---------------------------------------------------------------------------
+
+
+def quantize_front_params(params, split_layer: int, qw_front: int, num_blocks: int,
+                          pattern_len: int = 1):
+    """Quantize the *front* (edge) segment of a stacked-blocks param pytree.
+
+    Parameters under ``params['blocks']`` are stacked along dim 0 with
+    ``num_blocks`` entries (each covering ``pattern_len`` layers).  Front
+    blocks [0, split_layer/pattern_len) are symmetrically quantized at
+    ``qw_front`` bits and immediately dequantized back — fake-quant semantics,
+    which is what accuracy evaluation needs; the int carriers for deployment
+    come from :func:`repro.core.quant.quantize_sym` directly.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.quant import quantize_sym
+
+    front_blocks = min(num_blocks, max(0, split_layer // max(pattern_len, 1)))
+    if front_blocks == 0:
+        return params
+
+    def fake_quant_leading(x):
+        if not hasattr(x, "ndim") or x.ndim < 2 or x.shape[0] != num_blocks:
+            return x
+        front = x[:front_blocks]
+        fq = quantize_sym(front.reshape(front.shape[0], -1), qw_front, axis=-1)
+        deq = fq.dequantize(front.dtype).reshape(front.shape)
+        return jnp.concatenate([deq, x[front_blocks:]], axis=0)
+
+    import jax
+
+    out = dict(params)
+    out["blocks"] = jax.tree_util.tree_map(fake_quant_leading, params["blocks"])
+    return out

@@ -1,0 +1,79 @@
+"""Stage-boundary payload codec: TS + TAB-Q (paper §2.3, Fig. 3 pipeline).
+
+``encode`` and ``decode`` are jit-able and differentiable-free (used at
+inference); ``encode_ste`` provides a straight-through variant so the codec
+can sit inside a training graph (QAT-style ablations).
+
+Payload accounting matches the paper: T_above is CSR-accounted, T_below is
+per-token adaptive bits (+ per-token scale/zero/bitwidth sideband), and an
+optional analytical rANS bound (Shannon entropy of the code stream) reports
+what the paper's DietGPU stage would add — see DESIGN.md §2 for why the
+entropy coder itself is not executed on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tabq import TabQResult, tabq, tabq_fixed
+from repro.core.ts import SparseAbove, reconstruct, ts_encode
+
+
+@dataclasses.dataclass
+class Payload:
+    """What crosses the split boundary (a pytree)."""
+
+    below: TabQResult
+    above: SparseAbove
+
+    def payload_bits(self) -> jax.Array:
+        return self.below.payload_bits() + self.above.csr_bytes() * 8
+
+
+jax.tree_util.register_pytree_node(
+    Payload,
+    lambda p: ((p.below, p.above), None),
+    lambda _, ch: Payload(*ch),
+)
+
+
+@partial(jax.jit, static_argnames=("max_bits", "capacity", "fixed_bits"))
+def encode(t: jax.Array, *, tau: float = 5.0, delta: float = 0.2, max_bits: int = 8,
+           capacity: int | None = None, fixed_bits: int | None = None) -> Payload:
+    """TS then TAB-Q.  ``t``: (tokens, D).  ``fixed_bits`` bypasses the
+    adaptive search (Algorithm 2's budget-dictated fallback)."""
+    tokens, d = t.shape
+    capacity = capacity if capacity is not None else max(16, (tokens * d) // 1024)
+    below, above = ts_encode(t, tau, capacity)
+    if fixed_bits is not None:
+        q = tabq_fixed(below, fixed_bits)
+    else:
+        q = tabq(below, max_bits=max_bits, delta=delta)
+    return Payload(q, above)
+
+
+@jax.jit
+def decode(p: Payload) -> jax.Array:
+    """Eq. (7): dequantize T_below, reinstate T_above."""
+    below = p.below.dequantize()
+    return reconstruct(below, p.above)
+
+
+def encode_decode_ste(t: jax.Array, **kw) -> jax.Array:
+    """Straight-through encode→decode (gradient = identity)."""
+    out = decode(encode(jax.lax.stop_gradient(t), **kw))
+    return t + jax.lax.stop_gradient(out - t)
+
+
+def entropy_bound_bits(q: TabQResult, n_bins: int = 256) -> jax.Array:
+    """Shannon bound for an rANS pass over the magnitude codes (analytical
+    stand-in for the paper's DietGPU stage)."""
+    codes = jnp.clip(q.codes.reshape(-1), 0, n_bins - 1).astype(jnp.int32)
+    hist = jnp.zeros(n_bins).at[codes].add(1.0)
+    p = hist / jnp.maximum(jnp.sum(hist), 1.0)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-12)), 0.0))
+    return h * codes.shape[0] + q.bits.shape[0] * (64 + 8)

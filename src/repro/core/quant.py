@@ -1,0 +1,214 @@
+"""Integer quantization primitives (paper §2.3.2, Eq. 5-6).
+
+Implements the paper's asymmetric integer quantization (AIQ) exactly as
+written — note the paper's convention ``Q_max = 2^(Q-1) - 1`` (one bit is
+reserved for the sign in the TAB-Q pipeline, so AIQ quantizes magnitudes) —
+plus the symmetric per-channel / group-wise weight quantizers used by OPSC
+(§2.1) and the Atom-lite baseline (outlier channels in int8, rest int4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def qmax_for_bits(bits) -> jax.Array:
+    """Paper Eq. (6): Q_max = 2^(Q-1) - 1."""
+    return (2 ** (jnp.asarray(bits, jnp.int32) - 1) - 1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Asymmetric integer quantization — Eq. (5)-(6)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("axis",))
+def aiq(t: jax.Array, bits: jax.Array, axis: int | None = None):
+    """Asymmetric integer quantization of ``t`` at ``bits`` bits.
+
+    Eq. (5)-(6):  s = (T_max - T_min) / Q_max,  z = ceil(T_min / s),
+                  T_hat = round(T / s + z)   (so dequant = (T_hat - z) * s).
+
+    ``axis``: reduction axis for min/max (``None`` = whole tensor, ``-1`` =
+    per-token when ``t`` is (tokens, features)).  ``bits`` may be a scalar or
+    broadcastable per-token array (used by TAB-Q).
+
+    Returns (codes f32-valued integers, scale, zero).
+    """
+    if axis is None:
+        t_min = jnp.min(t)
+        t_max = jnp.max(t)
+    else:
+        t_min = jnp.min(t, axis=axis, keepdims=True)
+        t_max = jnp.max(t, axis=axis, keepdims=True)
+    qmax = qmax_for_bits(bits)
+    s = (t_max - t_min) / jnp.maximum(qmax, 1.0)
+    s = jnp.where(jnp.abs(s) < _EPS, _EPS, s)
+    z = jnp.ceil(t_min / s)
+    codes = jnp.round(t / s + z)
+    # valid code range: the paper's z sits *inside* the rounding, so codes
+    # span [round(t_min/s + z), +Q_max] (2^(Q-1) distinct values)
+    c_lo = jnp.round(t_min / s + z)
+    codes = jnp.clip(codes, c_lo, c_lo + qmax)
+    return codes, s, z
+
+
+def aiq_dequant(codes: jax.Array, s: jax.Array, z: jax.Array) -> jax.Array:
+    """Eq. (7) dense part: (T_hat - z) * s."""
+    return (codes - z) * s
+
+
+# ---------------------------------------------------------------------------
+# Symmetric per-channel weight quantization (OPSC front/back segments)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """An int-quantized tensor + metadata. A pytree."""
+
+    codes: jax.Array  # int8 carrier (int4 values also live in int8)
+    scale: jax.Array  # f32, broadcastable against codes
+    bits: int  # static
+    shape: tuple  # original shape (static)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return (self.codes.astype(jnp.float32) * self.scale).astype(dtype)
+
+    @property
+    def nbytes(self) -> int:
+        import numpy as np
+
+        return int(np.prod(self.shape)) * self.bits // 8 + self.scale.size * 4
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedTensor,
+    lambda qt: ((qt.codes, qt.scale), (qt.bits, qt.shape)),
+    lambda aux, ch: QuantizedTensor(ch[0], ch[1], aux[0], aux[1]),
+)
+
+
+def quantize_sym(w: jax.Array, bits: int, axis: int | None = -1) -> QuantizedTensor:
+    """Symmetric per-channel quantization: codes in [-(2^(b-1)-1), 2^(b-1)-1]."""
+    qmax = float(2 ** (bits - 1) - 1)
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / qmax
+    carrier = jnp.int8 if bits <= 8 else jnp.int32
+    codes = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(carrier)
+    return QuantizedTensor(codes, scale.astype(jnp.float32), bits, tuple(w.shape))
+
+
+def quantize_groupwise(w: jax.Array, bits: int, group: int = 128) -> QuantizedTensor:
+    """Group-wise symmetric quantization along dim 0 (in-features).
+
+    Atom-style: each ``group`` consecutive input channels share a scale.
+    ``w``: (in, out).  Pads the in-dim if not divisible.
+    """
+    din, dout = w.shape
+    pad = (-din) % group
+    wp = jnp.pad(w, ((0, pad), (0, 0)))
+    g = wp.reshape(-1, group, dout)
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(g), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / qmax
+    codes = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+    codes = codes.reshape(din + pad, dout)[:din].astype(jnp.int8)
+    scale = jnp.repeat(scale, group, axis=1).reshape(din + pad, dout)[:din]
+    # store one scale per (group, out) — keep broadcast form compact:
+    scale_c = scale[::group][: (din + group - 1) // group]
+    return QuantizedTensor(codes, scale_c.repeat(group, 0)[:din], bits, (din, dout))
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (two nibbles per int8 byte) — storage for OPSC front weights
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Pack signed int4 values (range [-7,7]) pair-wise into int8."""
+    flat = codes.reshape(-1)
+    if flat.shape[0] % 2:
+        flat = jnp.pad(flat, (0, 1))
+    lo = (flat[0::2].astype(jnp.int32) & 0xF)
+    hi = (flat[1::2].astype(jnp.int32) & 0xF) << 4
+    return (lo | hi).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_int4`; returns int8 values, length ``n``."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    vals = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+    # sign-extend 4-bit two's complement
+    vals = jnp.where(vals >= 8, vals - 16, vals)
+    return vals.astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Baseline quantizers for Table 3 comparison (lite re-implementations)
+# ---------------------------------------------------------------------------
+
+
+def smoothquant_lite(w: jax.Array, act_absmax: jax.Array, bits_w: int, alpha: float = 0.5):
+    """SmoothQuant: migrate activation outliers into weights via per-channel
+    smoothing s_j = absmax_act_j^alpha / absmax_w_j^(1-alpha), then per-tensor
+    int quantization.  Returns (QuantizedTensor of W*s, smoothing vector)."""
+    w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), _EPS)
+    s = jnp.maximum(act_absmax, _EPS) ** alpha / w_absmax ** (1.0 - alpha)
+    s = jnp.maximum(s, _EPS)
+    qt = quantize_sym(w * s[:, None], bits_w, axis=None)  # per-tensor (E1 is static)
+    return qt, s
+
+
+def omniquant_lite(w: jax.Array, bits: int, clip_grid=(1.0, 0.9, 0.8, 0.7, 0.6)):
+    """OmniQuant-lite: grid-search a clipping ratio minimizing MSE, per-channel."""
+    best = None
+    for c in clip_grid:
+        qmax = float(2 ** (bits - 1) - 1)
+        amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True) * c
+        scale = jnp.maximum(amax, _EPS) / qmax
+        codes = jnp.clip(jnp.round(w / scale), -qmax, qmax)
+        err = jnp.mean((codes * scale - w) ** 2, axis=-1, keepdims=True)
+        if best is None:
+            best = (err, codes, scale)
+        else:
+            berr, bcodes, bscale = best
+            take = err < berr
+            best = (
+                jnp.where(take, err, berr),
+                jnp.where(take, codes, bcodes),
+                jnp.where(take, scale, bscale),
+            )
+    _, codes, scale = best
+    return QuantizedTensor(codes.astype(jnp.int8), scale, bits, tuple(w.shape))
+
+
+def atom_lite(w: jax.Array, bits_low: int = 4, outlier_frac: float = 1 / 128, group: int = 128):
+    """Atom-lite: keep the highest-|.|-norm input channels in int8, quantize the
+    rest group-wise at ``bits_low``.  Returns (low QuantizedTensor with outlier
+    channels zeroed, outlier QuantizedTensor int8, outlier channel mask)."""
+    din = w.shape[0]
+    n_out = max(1, int(din * outlier_frac))
+    norms = jnp.sum(jnp.abs(w), axis=1)
+    thresh = jnp.sort(norms)[-n_out]
+    mask = norms >= thresh  # (din,) outlier channels
+    w_low = jnp.where(mask[:, None], 0.0, w)
+    w_out = jnp.where(mask[:, None], w, 0.0)
+    q_low = quantize_groupwise(w_low, bits_low, group)
+    q_out = quantize_sym(w_out, 8, axis=-1)
+    return q_low, q_out, mask
+
+
+def dequant_atom(q_low: QuantizedTensor, q_out: QuantizedTensor, mask: jax.Array):
+    return jnp.where(mask[:, None], q_out.dequantize(), q_low.dequantize())

@@ -1,0 +1,131 @@
+"""TAB-Q — Token-wise Adaptive Bit integer Quantization (paper Algorithm 1).
+
+The paper's Algorithm 1, per token:
+  1. split sign / magnitude (one bit reserved for sign),
+  2. quantize |T| at the maximum level Q̄-1 → reference codes T̂₀,
+  3. repeatedly lower Q, re-quantize, and measure the distortion proxy
+        δ = mean | round(T̂₀ / 2^(Q̄-Q)) - T̂ |
+     stopping at the last Q whose δ ≤ Δ.
+
+Vectorized JAX formulation: the candidate bit levels form a small static set,
+so we evaluate δ for every level at once and select, **per token**, the
+smallest bit-width whose distortion stays within Δ — exactly the fixed point
+of the sequential loop (δ is non-decreasing as Q shrinks for these rounding
+ladders; ties resolve identically).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import aiq, aiq_dequant
+
+MIN_BITS = 2
+
+
+@dataclasses.dataclass
+class TabQResult:
+    """Per-token adaptively quantized tensor (a pytree).
+
+    codes : (tokens, D) magnitude codes (float-valued integers)
+    sign  : (tokens, D) int8 in {-1, 0, +1} — the paper's reserved sign bit
+    scale : (tokens, 1) per-token scale
+    zero  : (tokens, 1) per-token zero point
+    bits  : (tokens,)  per-token chosen bit-width (includes the sign bit)
+    """
+
+    codes: jax.Array
+    sign: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    bits: jax.Array
+
+    def dequantize(self) -> jax.Array:
+        return aiq_dequant(self.codes, self.scale, self.zero) * self.sign
+
+    def payload_bits(self) -> jax.Array:
+        """Exact payload accounting: D·Q_token bits per token (sign included
+        in Q_token per the paper) + 64 bits/token for (scale, zero) + 8 bits
+        for the bit-width byte."""
+        d = self.codes.shape[-1]
+        return jnp.sum(self.bits.astype(jnp.float32) * d).astype(jnp.int32) + self.bits.shape[0] * (64 + 8)
+
+
+jax.tree_util.register_pytree_node(
+    TabQResult,
+    lambda r: ((r.codes, r.sign, r.scale, r.zero, r.bits), None),
+    lambda _, ch: TabQResult(*ch),
+)
+
+
+@partial(jax.jit, static_argnames=("max_bits",))
+def tabq(t: jax.Array, max_bits: int = 8, delta: float = 0.2) -> TabQResult:
+    """Algorithm 1, vectorized over tokens.
+
+    ``t``: (tokens, D).  ``max_bits`` = Q̄ (total, incl. sign bit).
+    ``delta`` = Δ distortion tolerance.
+    """
+    sign = jnp.sign(t).astype(jnp.int8)
+    mag = jnp.abs(t)
+    q_ref = max_bits - 1  # line 4: one bit reserved for the sign
+    codes0, s0, z0 = aiq(mag, q_ref, axis=-1)
+
+    n = t.shape[-1]
+    levels = list(range(q_ref - 1, MIN_BITS - 1, -1))  # Q̄-1 … MIN_BITS
+    if not levels:
+        return TabQResult(codes0, sign, s0, z0, jnp.full(t.shape[:-1], max_bits, jnp.int32))
+
+    def level_result(q):
+        codes, s, z = aiq(mag, q, axis=-1)
+        # line 9: δ = Σ | round(T̂₀ / 2^(Q̄-Q)) - T̂ | / n, per token
+        shift = 2.0 ** (q_ref - q)
+        delta_q = jnp.sum(jnp.abs(jnp.round(codes0 / shift) - codes), axis=-1) / n
+        return codes, s, z, delta_q
+
+    all_codes, all_s, all_z, all_d = [], [], [], []
+    for q in levels:
+        c, s, z, d = level_result(q)
+        all_codes.append(c)
+        all_s.append(s)
+        all_z.append(z)
+        all_d.append(d)
+    all_codes = jnp.stack(all_codes)  # (L, tokens, D)
+    all_s = jnp.stack(all_s)
+    all_z = jnp.stack(all_z)
+    all_d = jnp.stack(all_d)  # (L, tokens)
+
+    ok = all_d <= delta  # levels admissible per token
+    # sequential semantics: walk down from Q̄-1; stop before the first level
+    # whose δ > Δ  →  admissible prefix length per token
+    prefix_ok = jnp.cumprod(ok.astype(jnp.int32), axis=0).astype(bool)
+    n_ok = jnp.sum(prefix_ok, axis=0)  # 0 .. L
+    # n_ok == 0 → keep the initial Q̄-1 quantization
+    idx = jnp.maximum(n_ok - 1, 0)  # index into levels
+    take_init = n_ok == 0
+
+    def gather(stack, init):
+        g = jnp.take_along_axis(
+            stack, idx[None, ..., None] if stack.ndim == 3 else idx[None, ...], axis=0
+        )[0]
+        cond = take_init[..., None] if stack.ndim == 3 else take_init
+        return jnp.where(cond, init, g)
+
+    codes = gather(all_codes, codes0)
+    scale = gather(all_s[..., 0], s0[..., 0])[..., None]
+    zero = gather(all_z[..., 0], z0[..., 0])[..., None]
+    bits_mag = jnp.where(take_init, q_ref, jnp.asarray(levels, jnp.int32)[idx])
+    bits = bits_mag + 1  # + sign bit
+    return TabQResult(codes, sign, scale, zero, bits.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def tabq_fixed(t: jax.Array, bits: int) -> TabQResult:
+    """Non-adaptive token-wise quantization at a fixed bit-width (used when a
+    hard payload budget dictates the level, e.g. Algorithm 2 fallbacks)."""
+    sign = jnp.sign(t).astype(jnp.int8)
+    codes, s, z = aiq(jnp.abs(t), bits - 1, axis=-1)
+    return TabQResult(codes, sign, s, z, jnp.full(t.shape[:-1], bits, jnp.int32))

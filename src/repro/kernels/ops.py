@@ -1,0 +1,56 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies execute in Python for correctness validation) and False on
+real TPU backends.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_matmul import dequant_matmul as _dequant_matmul
+from repro.kernels.tabq_kernel import tabq_quantize as _tabq_quantize
+from repro.kernels.ts_mask import ts_mask as _ts_mask
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("bits", "block_t", "interpret"))
+def tabq_quantize(x, bits: int = 8, block_t: int = 8, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _tabq_quantize(x, bits, block_t, interpret)
+
+
+def tabq_dequantize(codes, scale, zero, sign):
+    return ref.tabq_dequantize_ref(codes, scale, zero, sign)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def dequant_matmul(x, w_codes, w_scale, block_m: int = 128, block_n: int = 128,
+                   block_k: int = 512, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dequant_matmul(x, w_codes, w_scale, block_m, block_n, block_k,
+                           interpret)
+
+
+@partial(jax.jit, static_argnames=("tau", "block_t", "interpret"))
+def ts_mask(x, tau: float, block_t: int = 8, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ts_mask(x, tau, block_t, interpret)
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos,
+                     block_s: int = 512, interpret: bool | None = None):
+    from repro.kernels.decode_attention import decode_attention as _da
+
+    interpret = _default_interpret() if interpret is None else interpret
+    return _da(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos,
+               block_s, interpret)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tabq_quantize_ref(x: jax.Array, bits: int):
+    """Per-token asymmetric magnitude quantization (TAB-Q inner op, Eq. 5-6).
+
+    x (T, D) → (codes int8 = |q|·sign carrier with separate sign, scale (T,1),
+    zero (T,1), sign (T, D) int8). Matches repro.core.quant.aiq on |x| with
+    per-token reduction."""
+    sign = jnp.sign(x).astype(jnp.int8)
+    mag = jnp.abs(x.astype(jnp.float32))
+    qmax = float(2 ** (bits - 1) - 1)
+    t_min = jnp.min(mag, axis=-1, keepdims=True)
+    t_max = jnp.max(mag, axis=-1, keepdims=True)
+    s = jnp.maximum((t_max - t_min) / max(qmax, 1.0), 1e-8)
+    z = jnp.ceil(t_min / s)
+    codes = jnp.round(mag / s + z)
+    c_lo = jnp.round(t_min / s + z)
+    codes = jnp.clip(codes, c_lo, c_lo + qmax)
+    return codes.astype(jnp.int32), s, z, sign
+
+
+def tabq_dequantize_ref(codes, s, z, sign):
+    return (codes.astype(jnp.float32) - z) * s * sign
+
+
+def dequant_matmul_ref(x: jax.Array, w_codes: jax.Array, w_scale: jax.Array):
+    """x (M, K) × int8 codes (K, N) with per-output-channel scale (N,) →
+    f32 (M, N): out = (x @ codes) · scale."""
+    acc = jnp.dot(x.astype(jnp.float32), w_codes.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return acc * w_scale[None, :]
+
+
+def ts_mask_ref(x: jax.Array, tau: float):
+    """Threshold split (Eq. 4): (below, mask uint8, count int32)."""
+    mask = (jnp.abs(x) >= tau)
+    below = jnp.where(mask, 0.0, x.astype(jnp.float32))
+    return below, mask.astype(jnp.uint8), jnp.sum(mask, dtype=jnp.int32)
+
+
+def decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos):
+    """Dense oracle for the int8-KV decode-attention kernel.
+
+    q (B,K,G,hd); codes (B,K,S,hd) int8 with scales (B,K,S); kv_pos (B,S);
+    q_pos scalar → (B,K,G,hd) f32."""
+    hd = q.shape[-1]
+    k = k_codes.astype(jnp.float32) * k_scale[..., None]
+    v = v_codes.astype(jnp.float32) * v_scale[..., None]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), k) / (hd ** 0.5)
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", p, v)

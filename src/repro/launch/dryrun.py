@@ -1,0 +1,161 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+# (the two lines above MUST run before any jax import — jax locks the device
+# count on first backend initialization)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, prove memory fits, and extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all                 # 16×16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2×16×16
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_roofline
+from repro.launch.shapes import SHAPES, get_target, supports
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mem_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str = OUT_DIR,
+            save_hlo: bool = False, **opt_overrides) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod512" if multi_pod else "pod256"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if not supports(cfg, shape):
+        rec = {"tag": tag, "status": "skipped",
+               "reason": "full-attention arch at 500k decode (DESIGN.md)"}
+        _save(out_dir, tag, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args = get_target(cfg, shape_name, mesh, **opt_overrides)
+        jax.set_mesh(mesh)  # context mesh (shard_map) + pjit mesh
+        # donation mirrors production: train donates (params, opt_state);
+        # decode donates the KV/SSM caches — without it memory_analysis
+        # double-counts the scan's cache ys as temp
+        donate = {"train": (0, 1), "decode": (2,)}.get(shape.kind, ())
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = _mem_dict(compiled)
+        print(mem or "(memory_analysis unavailable on CPU backend)")
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+        rl = build_roofline(cfg, shape, compiled, mesh)
+        from repro.launch.hlo_cost import analyze as hlo_analyze
+
+        hc = hlo_analyze(compiled.as_text())
+        coll_bytes = hc.collective_bytes_by_kind
+        rec = {
+            "tag": tag, "status": "ok", "arch": arch, "shape": shape_name,
+            "mesh": mesh_name, "n_devices": int(mesh.devices.size),
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": mem,
+            "cost_analysis": {k: float(cost[k]) for k in
+                              ("flops", "bytes accessed") if k in cost},
+            "roofline": rl.as_dict(),
+            "collectives": {"bytes": coll_bytes,
+                            "unknown_trip_loops": hc.unknown_trip_loops},
+            "opt_overrides": {k: str(v) for k, v in opt_overrides.items()},
+        }
+        if save_hlo:
+            with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+                f.write(compiled.as_text())
+    except Exception as e:  # a failure here is a bug in the system
+        rec = {"tag": tag, "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:],
+               "elapsed_s": round(time.time() - t0, 1)}
+    _save(out_dir, tag, rec)
+    return rec
+
+
+def _save(out_dir: str, tag: str, rec: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if not (args.all or args.arch):
+        ap.error("pass --arch or --all")
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            t0 = time.time()
+            rec = run_one(a, s, args.multi_pod, args.out, args.save_hlo)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (f" dominant={r['dominant']}"
+                         f" c={r['compute_s']:.3e} m={r['memory_s']:.3e}"
+                         f" x={r['collective_s']:.3e}")
+            elif status == "error":
+                extra = " " + rec["error"][:120]
+            print(f"[{time.time() - t0:7.1f}s] {rec['tag']}: {status}{extra}",
+                  flush=True)
+            results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors ==")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

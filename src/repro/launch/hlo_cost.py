@@ -1,0 +1,231 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts each ``while`` body ONCE —
+useless for scan-heavy programs (an 88-block scan × 8 grad-accum steps
+under-counts ~700×). This module parses the post-SPMD HLO text, builds the
+computation call graph, extracts static trip counts from loop conditions
+(``constant(N)`` + LT compare — the lax.scan pattern), and weights:
+
+  * dot FLOPs            — 2 · |result| · |contracted dims|,
+  * collective bytes     — result bytes of all-gather / all-reduce /
+                           reduce-scatter / all-to-all / collective-permute,
+  * materialized bytes   — 2 × Σ result bytes of top-level (non-fusion-
+                           internal) ops — a standard read+write HBM-traffic
+                           estimate (fusion internals never hit HBM).
+
+Validated against the analytic 6·N·D model in tests (ratios land in the
+expected remat/recompute band instead of 10–300× off).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 0.5,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 0.5,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e5m2|f8e4m3fn|s64|s32|s16|s8|s4|u64|u32|u16|u8|u4|"
+    r"pred|c64|c128)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^(\(?[^(]*?\)?)\s+([\w\-]+)\((.*)$")
+
+
+def _shape_dims(shape_text: str):
+    """All (dtype, dims) found in a type string (tuples give several)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        d = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dt, d))
+    return out
+
+
+def _shape_bytes(shape_text: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_dims(shape_text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_text: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+    symbols: dict  # %name -> result type text
+
+
+def parse_computations(hlo: str) -> dict:
+    comps: dict = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*{", stripped)
+        if header and not line.startswith(" "):
+            cur = _Computation(header.group(1), [], {})
+            comps[cur.name] = cur
+            if stripped.startswith("ENTRY") or raw.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if raw.startswith("ENTRY"):
+            h2 = re.match(r"^ENTRY\s+(%[\w.\-]+)", raw)
+            if h2:
+                cur = _Computation(h2.group(1), [], {})
+                comps[cur.name] = cur
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        om = _OP_RE.match(rhs)
+        if not om:
+            continue
+        result_text, kind, _ = om.groups()
+        cur.symbols[name] = result_text
+        cur.ops.append(_Op(name, kind, result_text, stripped))
+    return comps
+
+
+def _trip_count(cond: _Computation) -> int | None:
+    const = None
+    for op in cond.ops:
+        c = re.search(r"constant\((\d+)\)", op.line)
+        if c and op.kind == "constant":
+            const = int(c.group(1))
+    for op in cond.ops:
+        if op.kind == "compare" and "direction=LT" in op.line and const is not None:
+            return const
+    return const
+
+
+def _called(line: str) -> dict:
+    """Computation references on an op line: {role: comp_name}."""
+    out = {}
+    for role in ("condition", "body", "calls", "to_apply"):
+        m = re.search(role + r"=(%[\w.\-]+)", line)
+        if m:
+            out[role] = m.group(1)
+    return out
+
+
+def _dot_flops(op: _Op, symbols: dict) -> float:
+    operands = re.findall(r"dot\((%[\w.\-]+),\s*(%[\w.\-]+)\)", op.line)
+    if not operands:
+        return 0.0
+    lhs_name = operands[0][0]
+    lhs_text = symbols.get(lhs_name, "")
+    lhs_shapes = _shape_dims(lhs_text)
+    res_shapes = _shape_dims(op.result_text)
+    if not lhs_shapes or not res_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    res_n = 1
+    for d in res_shapes[0][1]:
+        res_n *= d
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * res_n * contract
+
+
+_SKIP_MEMORY = {"parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "copy-start", "copy-done", "after-all"}
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    collective_bytes: float
+    memory_bytes: float
+    collective_bytes_by_kind: dict
+    unknown_trip_loops: int
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HloCost(0, 0, 0, {}, 0)
+
+    # multipliers via DFS over the call graph
+    mult: dict = {}
+    fusion_internal: set = set()
+    unknown = [0]
+
+    def visit(comp_name: str, m: float, in_fusion: bool):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        mult[comp_name] = mult.get(comp_name, 0.0) + m
+        if in_fusion:
+            fusion_internal.add(comp_name)
+        for op in comp.ops:
+            refs = _called(op.line)
+            if op.kind == "while":
+                cond = comps.get(refs.get("condition", ""))
+                tc = _trip_count(cond) if cond else None
+                if tc is None:
+                    tc = 1
+                    unknown[0] += 1
+                visit(refs.get("body", ""), m * tc, in_fusion)
+                visit(refs.get("condition", ""), m * tc, True)  # cond ~ free
+            elif op.kind == "fusion":
+                visit(refs.get("calls", ""), m, True)
+            elif "to_apply" in refs:
+                visit(refs["to_apply"], m, in_fusion or op.kind in
+                      ("reduce", "sort", "scatter", "select-and-scatter",
+                       "reduce-window"))
+
+    visit(entry.name, 1.0, False)
+
+    flops = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    mem = 0.0
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        internal = name in fusion_internal
+        for op in comp.ops:
+            if op.kind == "dot":
+                flops += m * _dot_flops(op, comp.symbols)
+            base = op.kind
+            for suf in ("-start", "-done"):
+                if base.endswith(suf):
+                    base = base[: -len(suf)]
+            if base in _COLLECTIVES and not op.kind.endswith("-done"):
+                coll[base] += m * _shape_bytes(op.result_text)
+            if not internal and op.kind not in _SKIP_MEMORY:
+                mem += m * _shape_bytes(op.result_text)
+    return HloCost(flops, sum(coll.values()), 2.0 * mem, coll, unknown[0])

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state. The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benches) sees the real single CPU device.
+
+Target: TPU v5e, 256 chips/pod. Single-pod mesh (16, 16) = ('data',
+'model'); multi-pod (2, 16, 16) = ('pod', 'data', 'model') — the 'pod' axis
+joins data parallelism by default and becomes the edge/cloud *stage* axis in
+split-computing mode (see repro.launch.split_dryrun).
+"""
+
+from __future__ import annotations
+
+import jax
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, TPU v5e
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """Axes carrying data parallelism (the 'pod' axis joins by default)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_size(mesh) -> int:
+    return int(jax.numpy.prod(jax.numpy.asarray(
+        [mesh.shape[a] for a in data_axes(mesh)])))
+
+
+def model_size(mesh) -> int:
+    return mesh.shape["model"]

@@ -1,0 +1,156 @@
+"""Roofline analysis from compiled artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), from the SPMD-partitioned per-device
+module:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / ICI_BW
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are NOT
+there — we parse the post-SPMD HLO (``compiled.as_text()``) and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); the
+ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 0.5,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 0.5,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e5m2|f8e4m3fn|s64|s32|s16|s8|s4|"
+                       r"u64|u32|u16|u8|u4|pred|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum bytes of every typed shape literal in ``text`` (handles tuples)."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum *result* operand sizes of collective ops in post-SPMD HLO.
+
+    Lines look like ``%all-reduce.5 = bf16[2,512]{1,0} all-reduce(...)``;
+    ``-start``/``-done`` async pairs are counted once (on -start; bare ops
+    counted directly)."""
+    bytes_by = {k: 0.0 for k in _COLLECTIVES}
+    count_by = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        shape_part, op = m.groups()
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        bytes_by[base] += _shape_bytes(shape_part)
+        count_by[base] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+    model_flops: float  # 6·N_active·D_tokens (global)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg: ArchConfig, shape_kind: str, tokens: int) -> float:
+    """6·N·D with N = active params (MoE counts top-k + shared only).
+    Train = fwd+bwd (the full 6·N·D); prefill = 2·N·D; decode = 2·N·D per
+    generated token (D = batch here)."""
+    n = cfg.total_params(active=True)
+    if shape_kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def build_roofline(cfg: ArchConfig, shape, compiled, mesh) -> Roofline:
+    """Trip-count-aware terms from the post-SPMD HLO (see repro.launch
+    .hlo_cost — XLA:CPU cost_analysis counts scan bodies once, which
+    under-counts deep-stack programs by orders of magnitude)."""
+    from repro.launch.hlo_cost import analyze
+
+    hc = analyze(compiled.as_text())
+    n_dev = mesh.devices.size
+    if shape.kind in ("train", "prefill"):
+        tokens = shape.global_batch * shape.seq_len
+    else:
+        tokens = shape.global_batch  # one step
+    return Roofline(hc.flops, hc.memory_bytes, hc.collective_bytes, n_dev,
+                    model_flops(cfg, shape.kind, tokens))

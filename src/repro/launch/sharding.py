@@ -1,0 +1,174 @@
+"""Sharding policies: map parameter/activation/cache pytrees onto the mesh.
+
+Rules (see DESIGN.md §5):
+
+* Parameters (train, FSDP×TP): last dim over 'model', second-to-last over the
+  data axes — when divisible. MoE expert tensors (nb, E, D, F) shard E over
+  'model' when the spec says ``shard='expert'`` and E divides; otherwise the
+  per-expert ffn dim. Embedding/lm_head shard vocab over 'model' so logits
+  come out vocab-sharded (the CE all-reduce is cheap; un-sharded 256k-vocab
+  logits are not).
+* Parameters (serve): same mapping with FSDP off when the TP-sharded weights
+  fit HBM (all archs but qwen3-moe-235b), on otherwise.
+* Batches: leading (batch) dim over the data axes.
+* KV caches: batch over data when divisible (else seq over data — the
+  long_500k batch=1 context-parallel case); kv-heads over 'model' when
+  divisible, else head_dim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import data_axes, model_size
+
+
+def _data_div(mesh, n: int) -> bool:
+    from repro.launch.mesh import data_size
+
+    return n % data_size(mesh) == 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                    for p in path)
+
+
+def param_specs(cfg: ArchConfig, mesh, fsdp: bool):
+    """PartitionSpec pytree matching ``init_params(cfg, ...)``."""
+    from repro.models.transformer import abstract_params
+
+    msize = model_size(mesh)
+    dax = data_axes(mesh)
+    moe_shard = {}
+    for i, ls in enumerate(cfg.pattern):
+        if ls.ffn is not None and ls.ffn.kind == "moe":
+            moe_shard[f"p{i}"] = ls.ffn.shard
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        is_block = name.startswith("blocks/")
+
+        if nd == 4 and is_block:  # MoE expert weights (nb, E, D, F)
+            pos = name.split("/")[1]
+            if moe_shard.get(pos) == "expert" and shape[1] % msize == 0:
+                spec[1] = "model"
+                if fsdp and shape[2] % len_prod(mesh, dax) == 0:
+                    spec[2] = dax
+            else:  # ffn sharding
+                if shape[3] % msize == 0:
+                    spec[3] = "model"
+                if fsdp and shape[2] % len_prod(mesh, dax) == 0:
+                    spec[2] = dax
+            return P(*spec)
+
+        if name == "embed" or name.startswith("embed"):
+            # (V, D) or (K, V, D): vocab over model, D over data (fsdp)
+            if shape[-2] % msize == 0:
+                spec[-2] = "model"
+            if fsdp and shape[-1] % len_prod(mesh, dax) == 0:
+                spec[-1] = dax
+            return P(*spec)
+
+        if nd >= 2:
+            if shape[-1] % msize == 0:
+                spec[-1] = "model"
+            if fsdp and shape[-2] % len_prod(mesh, dax) == 0:
+                spec[-2] = dax
+            return P(*spec)
+        return P()  # 1-D / scalars replicated
+
+    tmpl = abstract_params(cfg)
+    return jax.tree_util.tree_map_with_path(spec_for, tmpl)
+
+
+def len_prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def opt_state_specs(param_spec_tree):
+    """AdamW state (mu, nu, count) mirrors the parameter sharding."""
+    from repro.training.optimizer import AdamWState
+
+    return AdamWState(param_spec_tree, param_spec_tree, P())
+
+
+def batch_specs(mesh, batch: int):
+    dax = data_axes(mesh)
+    b_ax = dax if _data_div(mesh, batch) else None
+    return b_ax
+
+
+def cache_specs(cfg: ArchConfig, mesh, batch: int, seq: int, quantized: bool = False):
+    """PartitionSpec pytree matching ``init_caches``."""
+    msize = model_size(mesh)
+    dax = data_axes(mesh)
+    batch_ok = batch % len_prod(mesh, dax) == 0
+    b_ax = dax if batch_ok else None
+
+    def kv_spec(kv_heads, head_dim, size):
+        # Preferred: context parallelism — seq over 'model' (plus the data
+        # axes when batch=1). Decode attention then contracts over hd and
+        # psums only the tiny (b, h, 1, hd) output; sharding kv-heads or hd
+        # instead forces score-side collectives over the whole cache.
+        s_axes = []
+        if not batch_ok:
+            s_axes.extend(dax)  # long_500k batch=1
+        s_axes.append("model")
+        if size % len_prod(mesh, tuple(s_axes)) == 0:
+            s_ax = tuple(s_axes) if len(s_axes) > 1 else s_axes[0]
+            kv = P(None, b_ax, s_ax, None, None)
+            return kv, kv
+        if not batch_ok and size % len_prod(mesh, dax) == 0:
+            kv = P(None, b_ax, dax, None, None)
+            return kv, kv
+        if kv_heads % msize == 0:
+            kv = P(None, b_ax, None, "model", None)
+            return kv, kv
+        return (P(None, b_ax, None, None, None),) * 2
+
+    specs = []
+    for ls in cfg.pattern:
+        m = ls.mixer
+        if m.kind == "attn":
+            size = min(seq, m.sliding_window) if m.sliding_window else seq
+            kv, sc = kv_spec(m.num_kv_heads, m.head_dim, size)
+            pos_sax = kv[2]
+            from repro.models.layers import KVCache
+
+            specs.append(KVCache(kv, kv, sc if quantized else None,
+                                 sc if quantized else None,
+                                 P(None, b_ax, pos_sax)))
+        else:
+            conv_ch = m.d_inner + 2 * m.d_state
+            conv = P(None, b_ax, None, "model" if conv_ch % msize == 0 else None)
+            h_ax = "model" if m.n_heads % msize == 0 else None
+            state = P(None, b_ax, h_ax, None, None)
+            specs.append((conv, state))
+    return tuple(specs)
+
+
+def to_shaped(tree, spec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+
+    def attach(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(attach, tree, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def shardings_of(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

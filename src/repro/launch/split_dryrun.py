@@ -1,0 +1,149 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Split-computing pipeline dry-run (multi-pod): lower the 2-stage pod
+pipeline decode step and measure how TS/TAB-Q-style payload compression
+moves the inter-pod collective traffic — the paper's central quantity,
+measured in compiled HLO rather than simulated.
+
+  PYTHONPATH=src python -m repro.launch.split_dryrun --arch internlm2-20b \
+      [--shape decode_32k] [--bits 16 8 4] [--n-micro 4]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import sharding as shd
+from repro.launch.hlo_cost import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, default_opts
+from repro.launch.split_pipeline import (init_pipeline_caches,
+                                          pipeline_decode_sharded)
+from repro.models.transformer import abstract_params
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "split_dryrun")
+
+
+def run_one(arch: str, shape_name: str, payload_bits: int, n_micro: int) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    prefill = shape.kind == "prefill"
+    assert cfg.num_blocks % 2 == 0, f"{arch}: odd block count, pipeline n/a"
+    mesh = make_production_mesh(multi_pod=True)
+    jax.set_mesh(mesh)
+    opts = default_opts(cfg, shape)
+
+    params = abstract_params(cfg, jnp.bfloat16)
+    pspecs = shd.param_specs(cfg, mesh, fsdp=False)
+    # blocks: stage dim over 'pod' (dim 0) + the usual model sharding
+    def pod_spec(spec):
+        return P("pod", *tuple(spec)[1:]) if len(spec) >= 1 else spec
+
+    blocks = shd.to_shaped(
+        params["blocks"],
+        jax.tree_util.tree_map(pod_spec, pspecs["blocks"],
+                               is_leaf=lambda x: isinstance(x, P)),
+        mesh)
+    other = {k: shd.to_shaped(v, pspecs[k], mesh)
+             for k, v in params.items() if k != "blocks"}
+
+    b = shape.global_batch
+    bs = b // n_micro
+    s_tok = shape.seq_len if prefill else 1
+    tokens = jax.ShapeDtypeStruct(
+        (b, s_tok, cfg.num_codebooks) if cfg.embed == "musicgen" else (b, s_tok),
+        jnp.int32, sharding=NamedSharding(mesh, P()))
+    caches = jax.eval_shape(
+        lambda: init_pipeline_caches(cfg, bs, n_micro, shape.seq_len, opts))
+    cspecs = shd.cache_specs(cfg, mesh, bs, shape.seq_len, opts.quantized_kv)
+    # microbatch-major layout: (nb→'pod', micro=None, bs=None, seq..., ...);
+    # pods are stages, so drop any data-axes the policy put on the batch dim
+    def pipe_spec(spec):
+        clean = tuple(tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                            if a != "pod") or None if ax is not None else None
+                      for ax in tuple(spec))
+        clean = tuple(c[0] if isinstance(c, tuple) and len(c) == 1 else c
+                      for c in clean)
+        return P("pod", None, None, *clean[2:])
+
+    cspecs = jax.tree_util.tree_map(pipe_spec, cspecs,
+                                    is_leaf=lambda x: isinstance(x, P))
+    caches = shd.to_shaped(caches, cspecs, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+
+    fn = pipeline_decode_sharded(cfg, opts, mesh, n_micro, payload_bits,
+                                 prefill=prefill)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(fn).lower(blocks, other, tokens, caches, pos).compile()
+    hc = analyze(compiled.as_text())
+    # isolate the boundary-payload permutes by shape: the payload is the only
+    # (bs, seq, D[/2]) int8/uint8/bf16 tensor crossing the pod link
+    bs = b // n_micro
+    d_payload = cfg.d_model // 2 if payload_bits == 4 else cfg.d_model
+    import re as _re
+    payload_permute = 0.0
+    for line in compiled.as_text().splitlines():
+        if "collective-permute" not in line or "-done" in line:
+            continue
+        m = _re.search(r"(bf16|s8|u8|f32)\[([\d,]+)\]", line.strip())
+        if not m:
+            continue
+        dims = [int(x_) for x_ in m.group(2).split(",")]
+        # per-device payload: (bs, seq-shard, D[/2]) — seq may be partitioned
+        if len(dims) == 3 and dims[0] == bs and dims[2] == d_payload:
+            bytes_per = {"bf16": 2, "s8": 1, "u8": 1, "f32": 4}[m.group(1)]
+            n = 1
+            for x_ in dims:
+                n *= x_
+            payload_permute += n * bytes_per * (n_micro + 1)
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name, "payload_bits": payload_bits,
+        "n_micro": n_micro, "compile_s": round(time.time() - t0, 1),
+        "collective_bytes_by_kind": hc.collective_bytes_by_kind,
+        "collective_bytes": hc.collective_bytes,
+        "permute_bytes": hc.collective_bytes_by_kind.get("collective-permute", 0.0),
+        "payload_permute_bytes": payload_permute,
+        "flops": hc.flops,
+        "memory_bytes": hc.memory_bytes,
+        "arg_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(
+            OUT_DIR, f"{arch}__{shape_name}__bits{payload_bits}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-20b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--bits", type=int, nargs="+", default=[16, 8, 4])
+    ap.add_argument("--n-micro", type=int, default=4)
+    args = ap.parse_args()
+    base_permute = None
+    for bits in args.bits:
+        rec = run_one(args.arch, args.shape, bits, args.n_micro)
+        if base_permute is None:
+            base_permute = rec["permute_bytes"] or 1.0
+        print(f"[split-dryrun] {args.arch} {args.shape} bits={bits}: "
+              f"payload_permute={rec['payload_permute_bytes'] / 1e6:.2f} MB "
+              f"all_permute={rec['permute_bytes'] / 1e6:.2f} MB/dev "
+              f"total_coll={rec['collective_bytes'] / 1e6:.2f} MB "
+              f"compile={rec['compile_s']}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

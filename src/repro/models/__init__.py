@@ -1,0 +1,1 @@
+"""Model zoo: composable decoder layers, MoE, SSM, assembly."""

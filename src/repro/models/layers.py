@@ -1,0 +1,404 @@
+"""Model building blocks: norms, rotary embeddings (RoPE / M-RoPE /
+sinusoidal), GQA attention with flash-style double-chunked online softmax
+(pure JAX — the TPU Pallas kernels in ``repro.kernels`` cover the
+quantization hot spots; attention stays XLA-fusable and differentiable),
+SwiGLU/GELU MLPs, and KV caches (bf16 or int8-quantized per-token).
+
+Shapes: activations (B, S, D); q/k/v (B, S, H|K, hd); caches (B, S, K, hd).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Position encodings
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: jax.Array, dim: int, theta: float = 10000.0):
+    """positions (..., S) → (cos, sin) of shape (..., S, dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, hd); cos/sin (B, S, hd//2) or (S, hd//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1).astype(dt)
+
+
+def mrope_tables(positions_thw: jax.Array, dim: int, sections: tuple,
+                 theta: float = 10000.0):
+    """Qwen2-VL M-RoPE: ``positions_thw`` (3, B, S) temporal/height/width ids;
+    ``sections`` splits dim//2 into per-axis bands (e.g. (16, 24, 24))."""
+    assert sum(sections) == dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    cos_parts, sin_parts = [], []
+    start = 0
+    for axis, sec in enumerate(sections):
+        f = freqs[start : start + sec]
+        ang = positions_thw[axis].astype(jnp.float32)[..., None] * f  # (B,S,sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    return jnp.concatenate(cos_parts, -1), jnp.concatenate(sin_parts, -1)
+
+
+def sinusoidal_embedding(positions: jax.Array, dim: int) -> jax.Array:
+    """Classic transformer sinusoidal absolute embedding (MusicGen)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer-stack KV cache (a pytree). ``k``/``v`` are either bf16 tensors
+    (B, S, K, hd) or int8 code tensors with per-(token, head) scales —
+    realizing the paper's Q^a activation-bit control on the cache (Eq. 2).
+
+    ``pos`` holds the absolute position stored in each slot (ring buffers for
+    sliding-window layers overwrite slots; attention masks by position, so
+    slot order is irrelevant)."""
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array | None  # (B, S, K, 1) when quantized
+    v_scale: jax.Array | None
+    pos: jax.Array  # (B, S) int32; -1 = empty
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+jax.tree_util.register_pytree_node(
+    KVCache,
+    lambda c: ((c.k, c.v, c.k_scale, c.v_scale, c.pos), None),
+    lambda _, ch: KVCache(*ch),
+)
+
+
+def init_cache(batch: int, size: int, kv_heads: int, head_dim: int,
+               dtype=jnp.bfloat16, quantized: bool = False) -> KVCache:
+    shape = (batch, size, kv_heads, head_dim)
+    if quantized:
+        return KVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros((batch, size, kv_heads, 1), jnp.float32),
+            v_scale=jnp.zeros((batch, size, kv_heads, 1), jnp.float32),
+            pos=jnp.full((batch, size), -1, jnp.int32),
+        )
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), None, None,
+                   jnp.full((batch, size), -1, jnp.int32))
+
+
+def _quantize_kv(x: jax.Array):
+    """Symmetric int8 per-(token, head): the Eq. 2 Q_a control realized."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, window: int | None = None) -> KVCache:
+    """Write ``k_new``/``v_new`` (B, S_new, K, hd) at absolute position ``pos``
+    (scalar int32). Ring-buffered when ``window`` is set."""
+    size = cache.k.shape[1]
+    s_new = k_new.shape[1]
+    if window is not None and s_new >= size:
+        # writing ≥ a full ring: only the last ``size`` tokens survive; slice
+        # them out so scatter indices stay unique (a permutation of the ring)
+        keep = slice(s_new - size, None)
+        k_new, v_new = k_new[:, keep], v_new[:, keep]
+        pos = pos + (s_new - size)
+        s_new = size
+    if window is not None:
+        slots = (pos + jnp.arange(s_new)) % size  # ring buffer
+
+        def write(buf, val):
+            return buf.at[:, slots].set(val.astype(buf.dtype))
+
+        def write_pos(buf):
+            return buf.at[:, slots].set(pos + jnp.arange(s_new))
+
+    else:
+
+        def write(buf, val):  # contiguous → dynamic_update_slice (SPMD-friendly)
+            idx = (0, pos) + (0,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+
+        def write_pos(buf):
+            upd = (pos + jnp.arange(s_new)[None, :]) * jnp.ones(
+                (buf.shape[0], 1), jnp.int32)
+            return jax.lax.dynamic_update_slice(buf, upd, (0, pos))
+
+    if cache.quantized:
+        kc, ks = _quantize_kv(k_new)
+        vc, vs = _quantize_kv(v_new)
+        return KVCache(write(cache.k, kc), write(cache.v, vc),
+                       write(cache.k_scale, ks), write(cache.v_scale, vs),
+                       write_pos(cache.pos))
+    return KVCache(write(cache.k, k_new), write(cache.v, v_new), None, None,
+                   write_pos(cache.pos))
+
+
+# ---------------------------------------------------------------------------
+# Flash-style attention (pure JAX, double-chunked online softmax)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _soft_cap(scores: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "q_chunk", "kv_chunk"))
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, K, hd)
+    v: jax.Array,  # (B, Skv, K, hd)
+    q_pos: jax.Array,  # (B, Sq) absolute positions of queries
+    kv_pos: jax.Array,  # (B, Skv) absolute positions of keys (-1 = invalid)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    k_scale: jax.Array | None = None,  # (B, Skv, K, 1) int8-cache dequant
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Memory-bounded attention: outer scan over query chunks, inner scan over
+    KV chunks with online softmax. Never materializes an (Sq, Skv) score
+    tensor — required for the 32k/500k shapes. Supports GQA (grouped heads),
+    sliding windows, logit soft-capping and int8-quantized K/V."""
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    nq = -(-sq // qc)
+    nk = -(-skv // kc)
+    pad_q = nq * qc - sq
+    pad_k = nk * kc - skv
+
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q * scale).astype(jnp.float32)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-(10 ** 9))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    if nq == 1 and nk == 1:
+        # single-block fast path (decode): no scan, no reshape/dynamic-slice
+        # — keeps a seq- or head-sharded KV cache shardable under GSPMD
+        # (the scan path's dynamic-slice forces involuntary remat/all-gather)
+        q1 = qf.reshape(b, qc, kh, g, hd)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        if k_scale is not None:
+            kf = kf * k_scale
+            vf = vf * v_scale
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q1, kf,
+                       preferred_element_type=jnp.float32)
+        s = _soft_cap(s, softcap)
+        mask = kv_pos[:, None, None, None, :] >= 0
+        if causal:
+            mask &= kv_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        if window is not None:
+            mask &= kv_pos[:, None, None, None, :] > (
+                q_pos[:, None, None, :, None] - window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqc,bckd->bkgqd", p, vf,
+                         preferred_element_type=jnp.float32)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, hd)[:, :sq]
+        return out.astype(q.dtype)
+
+    # (B, nq, qc, K, G, hd) view of queries
+    qf = qf.reshape(b, nq, qc, kh, g, hd)
+    qp = q_pos.reshape(b, nq, qc)
+    kr = k.reshape(b, nk, kc, kh, hd)
+    vr = v.reshape(b, nk, kc, kh, hd)
+    kp = kv_pos.reshape(b, nk, kc)
+    ksr = k_scale.reshape(b, nk, kc, kh, 1) if k_scale is not None else None
+    vsr = v_scale.reshape(b, nk, kc, kh, 1) if v_scale is not None else None
+
+    def q_step(_, qi):
+        q_blk = qf[:, qi]  # (B, qc, K, G, hd)
+        qp_blk = qp[:, qi]  # (B, qc)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_blk = kr[:, ki]
+            v_blk = vr[:, ki]
+            if ksr is not None:
+                k_blk = k_blk.astype(jnp.float32) * ksr[:, ki]
+                v_blk = v_blk.astype(jnp.float32) * vsr[:, ki]
+            kp_blk = kp[:, ki]  # (B, kc)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", q_blk,
+                           k_blk.astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            s = _soft_cap(s, softcap)
+            mask = kp_blk[:, None, None, None, :] >= 0
+            if causal:
+                mask &= kp_blk[:, None, None, None, :] <= qp_blk[:, None, None, :, None]
+            if window is not None:
+                mask &= kp_blk[:, None, None, None, :] > (qp_blk[:, None, None, :, None] - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p, v_blk.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, K, G, qc, hd)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, qc, K, G, hd)
+
+    if nq == 1:
+        _, out = q_step(None, 0)
+        out = out[:, None]
+    else:
+        _, out = jax.lax.scan(q_step, None, jnp.arange(nq))
+        out = jnp.moveaxis(out, 0, 1)  # (B, nq, qc, K, G, hd)
+    out = out.reshape(b, nq * qc, h, hd)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def init_attention_params(key, d_model: int, num_heads: int, num_kv_heads: int,
+                          head_dim: int, dtype=jnp.float32, qk_norm: bool = False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(num_heads * head_dim)
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, num_heads * head_dim)) * s_in).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, num_kv_heads * head_dim)) * s_in).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, num_kv_heads * head_dim)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k4, (num_heads * head_dim, d_model)) * s_out).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | None,
+                    pos, q_positions, q_chunk=1024, kv_chunk=1024,
+                    decode: bool = False):
+    """One attention layer.
+
+    ``rope_cs``: (cos, sin) tables for the query positions, or None.
+    ``cache``/``pos``: cache plumbing (None for pure training). During
+    prefill the cache is *written* but attention runs over the fresh k/v
+    (a window-sized ring cache cannot serve early queries their own window;
+    chunked multi-segment prefill is not used by this framework). Only
+    ``decode=True`` attends through the cache. Returns (output, new_cache)."""
+    b, s, d = x.shape
+    h, kh, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (x @ params["wk"]).reshape(b, s, kh, hd)
+    v = (x @ params["wv"]).reshape(b, s, kh, hd)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = cache_update(cache, k, v, pos, spec.sliding_window)
+    if cache is not None and decode:
+        kv_k, kv_v = new_cache.k, new_cache.v
+        kv_pos = new_cache.pos
+        ks, vs = new_cache.k_scale, new_cache.v_scale
+    else:
+        kv_k, kv_v, kv_pos, ks, vs = k, v, q_positions, None, None
+
+    out = chunked_attention(
+        q, kv_k, kv_v, q_positions, kv_pos,
+        causal=True, window=spec.sliding_window, softcap=spec.attn_softcap,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, k_scale=ks, v_scale=vs)
+    out = out.reshape(b, s, h * hd) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {"w_up": (jax.random.normal(ks[0], (d_model, d_ff)) * s_in).astype(dtype),
+         "w_down": (jax.random.normal(ks[1], (d_ff, d_model)) * s_out).astype(dtype)}
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_layer(params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"]

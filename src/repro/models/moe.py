@@ -1,0 +1,197 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+Dispatch uses the rank-in-expert scatter formulation (no (T, E, capacity)
+one-hot dispatch tensor is ever materialized — only a (T·k, E) int32 cumsum),
+so compiled FLOPs reflect *active* parameters: expert matmuls are
+(E, capacity, D) × (E, D, F) with capacity ≈ T·k/E·cf.  This is what makes
+the roofline MODEL_FLOPS/HLO_FLOPs ratio honest for the MoE architectures.
+
+Sharding: expert dim over the 'model' mesh axis when divisible (qwen3: 128
+experts / 16), else the per-expert ffn dim (qwen2-moe: 60 experts → ffn
+sharding); see configs (``moe_shard``).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp_params, mlp_layer
+
+
+def init_moe_params(key, d_model: int, spec, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e, f = spec.num_experts, spec.d_ff
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(f)
+    p = {
+        "w_router": (jax.random.normal(ks[0], (d_model, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d_model, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d_model, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d_model)) * s_out).astype(dtype),
+    }
+    if spec.num_shared:
+        p["shared"] = init_mlp_params(ks[4], d_model, spec.num_shared * f,
+                                      gated=True, dtype=dtype)
+    return p
+
+
+def moe_layer(params, x: jax.Array, spec, capacity_factor: float = 1.25,
+              groups: int = 1):
+    """x (B, S, D) → (out (B, S, D), aux_loss scalar).
+
+    ``groups`` > 1 runs the rank-scatter dispatch independently per token
+    group (vmapped). With groups = the data-shard count, the scatter carries
+    a leading batch dim that GSPMD partitions over the data axes with ZERO
+    cross-shard traffic — the global formulation instead gets partitioned as
+    replicate-updates + all-reduce of the full (E, cap, D) buffer (~10 GB of
+    AR per layer-microbatch on qwen3-235b; §Perf hillclimb 2). Capacity and
+    token dropping become group-local, the standard EP behaviour.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = spec.num_experts, spec.top_k
+    groups = max(1, min(groups, t))
+    if t % groups:
+        groups = 1
+    tg = t // groups
+    cap = tg if capacity_factor <= 0 else max(1, int(tg * k / e * capacity_factor))
+
+    def dispatch(xt, w_gate, w_up, w_down):
+        # xt (tg, D) — one token group
+        logits = xt.astype(jnp.float32) @ params["w_router"]
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, sel = jax.lax.top_k(probs, k)
+        if spec.renormalize:
+            gate_vals = gate_vals / jnp.maximum(
+                jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+        sel_flat = sel.reshape(-1)
+        oh = jax.nn.one_hot(sel_flat, e, dtype=jnp.int32)
+        ranks = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1
+        keep = ranks < cap
+        pos = jnp.where(keep, ranks, 0)
+        x_rep = jnp.repeat(xt, k, axis=0)
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        buf = buf.at[sel_flat, pos].add(jnp.where(keep[:, None], x_rep, 0.0))
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) * jnp.einsum(
+            "ecd,edf->ecf", buf, w_up)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_down)
+
+        y = out_buf[sel_flat, pos]
+        y = jnp.where(keep[:, None], y, 0.0)
+        y = y * gate_vals.reshape(-1)[:, None].astype(y.dtype)
+        y = y.reshape(tg, k, d).sum(axis=1)
+        # load-balance auxiliary loss terms (Switch-style)
+        f_e = jnp.mean(jax.nn.one_hot(sel, e, dtype=jnp.float32).sum(1), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        return y, f_e, p_e
+
+    if groups == 1:
+        y, f_e, p_e = dispatch(x.reshape(t, d), params["w_gate"],
+                               params["w_up"], params["w_down"])
+    else:
+        y, f_e, p_e = jax.vmap(dispatch, in_axes=(0, None, None, None))(
+            x.reshape(groups, tg, d), params["w_gate"], params["w_up"],
+            params["w_down"])
+        y = y.reshape(t, d)
+        f_e, p_e = jnp.mean(f_e, 0), jnp.mean(p_e, 0)
+
+    if "shared" in params:
+        y = y + mlp_layer(params["shared"], x.reshape(t, d), "silu")
+    aux = e * jnp.sum(f_e * p_e) / k
+    return y.reshape(b, s, d), aux
+
+
+def moe_layer_ep(params, x: jax.Array, spec, data_axes: tuple,
+                 capacity_factor: float = 1.25, fsdp: bool = True):
+    """Expert-parallel MoE under partial-manual ``shard_map`` (§Perf
+    hillclimb 2).
+
+    The rank-scatter dispatch in :func:`moe_layer` is *global*: under GSPMD a
+    scatter whose updates are data-sharded and whose operand is
+    expert-sharded gets partitioned as replicate-updates + all-reduce the
+    full (E, cap, D) buffer — ~10 GB of AR per layer-microbatch on
+    qwen3-235b. Here the dispatch runs manually *inside each data shard*
+    (local tokens → local (E, cap_loc, D) buffer, zero collectives); only
+    the expert matmuls remain under GSPMD, which handles the 'model'-axis
+    TP/EP sharding of the weights. Per-shard capacity (cap/dsize) makes
+    token dropping shard-local — the standard EP formulation.
+    """
+    b, s, d = x.shape
+    e, k = spec.num_experts, spec.top_k
+
+    def local(x_loc, w_router, w_gate, w_up, w_down, shared):
+        bl = x_loc.shape[0]
+        t_loc = bl * s
+        cap_loc = (t_loc if capacity_factor <= 0
+                   else max(1, int(t_loc * k / e * capacity_factor)))
+        xt = x_loc.reshape(bl * s, d)
+        if fsdp:  # weights arrive data-sharded on D (ZeRO) → gather at use
+            w_gate_f = jax.lax.all_gather(w_gate, data_axes, axis=1, tiled=True)
+            w_up_f = jax.lax.all_gather(w_up, data_axes, axis=1, tiled=True)
+            w_down_f = jax.lax.all_gather(w_down, data_axes, axis=2, tiled=True)
+        else:
+            w_gate_f, w_up_f, w_down_f = w_gate, w_up, w_down
+
+        logits = xt.astype(jnp.float32) @ w_router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, sel = jax.lax.top_k(probs, k)
+        if spec.renormalize:
+            gate_vals = gate_vals / jnp.maximum(
+                jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+        sel_flat = sel.reshape(-1)
+        oh = jax.nn.one_hot(sel_flat, e, dtype=jnp.int32)
+        ranks = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1
+        keep = ranks < cap_loc
+        pos = jnp.where(keep, ranks, 0)
+        x_rep = jnp.repeat(xt, k, axis=0)
+        buf = jnp.zeros((e, cap_loc, d), x.dtype)
+        buf = buf.at[sel_flat, pos].add(jnp.where(keep[:, None], x_rep, 0.0))
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate_f)) * jnp.einsum(
+            "ecd,edf->ecf", buf, w_up_f)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_down_f)
+        y = out_buf[sel_flat, pos]
+        y = jnp.where(keep[:, None], y, 0.0)
+        y = y * gate_vals.reshape(-1)[:, None].astype(y.dtype)
+        y = y.reshape(bl * s, k, d).sum(axis=1)
+        if shared is not None:
+            sh = shared
+            if fsdp:
+                sh = dict(shared)
+                sh["w_gate"] = jax.lax.all_gather(shared["w_gate"], data_axes,
+                                                  axis=0, tiled=True)
+                sh["w_up"] = jax.lax.all_gather(shared["w_up"], data_axes,
+                                                axis=0, tiled=True)
+                sh["w_down"] = jax.lax.all_gather(shared["w_down"], data_axes,
+                                                  axis=0, tiled=True)
+            y = y + mlp_layer(sh, xt, "silu")
+        f_e = jnp.mean(jax.nn.one_hot(sel, e, dtype=jnp.float32).sum(1), axis=0)
+        p_e = jnp.mean(probs, axis=0)
+        aux = e * jnp.sum(f_e * p_e) / k
+        aux = jax.lax.pmean(aux, data_axes)
+        return y.reshape(bl, s, d), aux
+
+    from jax.sharding import PartitionSpec as P
+
+    dax = data_axes if len(data_axes) > 1 else data_axes[0]
+    w_spec2 = P(None, dax, None) if fsdp else P(None, None, None)
+    w_spec_down = P(None, None, dax) if fsdp else P(None, None, None)
+    shared = params.get("shared")
+    shared_spec = None
+    if shared is not None:
+        shared_spec = {kk: (P(dax, None) if fsdp else P(None, None))
+                       for kk in shared}
+    out = jax.shard_map(
+        local,
+        in_specs=(P(dax, None, None), P(None, None), w_spec2, w_spec2,
+                  w_spec_down, shared_spec),
+        out_specs=(P(dax, None, None), P()),
+        axis_names=set(data_axes),
+        check_vma=False,
+    )(x, params["w_router"], params["w_gate"], params["w_up"],
+      params["w_down"], shared)
+    return out

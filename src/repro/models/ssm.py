@@ -1,0 +1,156 @@
+"""Mamba-2 SSD (state-space duality) layers [arXiv:2405.21060].
+
+Chunked SSD for training/prefill (intra-chunk quadratic term + inter-chunk
+recurrence via ``lax.scan``) and the O(1) single-step recurrence for decode.
+The TPU adaptation keeps everything in einsum/scan form so XLA maps the
+intra-chunk quadratic onto the MXU; chunk length is a tunable (§Perf).
+
+Shapes: x (B, S, H, P); dt (B, S, H); A (H,); B/C (B, S, N) (group G = 1,
+broadcast over heads); state (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def init_ssm_params(key, d_model: int, spec, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    di, n, h = spec.d_inner, spec.d_state, spec.n_heads
+    s_in = 1.0 / math.sqrt(d_model)
+    conv_ch = di + 2 * n
+    return {
+        "w_z": (jax.random.normal(ks[0], (d_model, di)) * s_in).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d_model, di)) * s_in).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d_model, n)) * s_in).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d_model, n)) * s_in).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d_model, h)) * s_in).astype(dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1 init
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (spec.conv_width, conv_ch))
+                   * (1.0 / math.sqrt(spec.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm": jnp.ones((di,), dtype),
+        "w_out": (jax.random.normal(ks[6], (di, d_model)) * (1.0 / math.sqrt(di))).astype(dtype),
+    }
+
+
+def _depthwise_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                    conv_state: jax.Array | None):
+    """Causal depthwise conv over seq. xbc (B, S, C); w (W, C).
+    ``conv_state`` (B, W-1, C) holds the previous inputs for decode."""
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+W-1, C)
+    out = sum(full[:, i : i + xbc.shape[1]] * w[i] for i in range(width)) + b
+    new_state = full[:, -(width - 1) :]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, initial_state=None):
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    da = dtc * a  # (B, nc, q, H) — per-step log decay (A < 0)
+    cs = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (quadratic, MXU-friendly) --------------------------
+    # scores[i,j] = (C_i · B_j) · exp(cs_i - cs_j) · dt_j   for i ≥ j
+    cb = jnp.einsum("bzin,bzjn->bzij", cc, bc)  # (B, nc, q, q)
+    decay = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    scores = cb[..., None] * l_mat * dtc[:, :, None, :, :]  # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bzijh,bzjhp->bzihp", scores, xc)
+
+    # ---- chunk summaries and inter-chunk recurrence ---------------------
+    # S_z = Σ_j exp(cs_last - cs_j) · dt_j · B_j ⊗ x_j      (B,nc,H,P,N)
+    last = cs[:, :, -1:, :]  # (B,nc,1,H)
+    w_j = jnp.exp(last - cs) * dtc  # (B,nc,q,H)
+    s_chunk = jnp.einsum("bzjh,bzjn,bzjhp->bzhpn", w_j, bc, xc)
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H) total decay of a chunk
+
+    def step(state, inp):
+        s_z, dec = inp  # (B,H,P,N), (B,H)
+        new = state * dec[:, :, None, None] + s_z
+        return new, state  # emit the state *entering* the chunk
+
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        initial_state = initial_state.astype(jnp.float32)  # bf16 storage OK
+    final_state, states_in = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_in = jnp.moveaxis(states_in, 0, 1)  # (B, nc, H, P, N)
+
+    # y_inter_i = exp(cs_i) · C_i · S_in
+    y_inter = jnp.einsum("bzih,bzin,bzhpn->bzihp", jnp.exp(cs), cc, states_in)
+
+    y = (y_intra + y_inter).reshape(bsz, nc * q, h, p)[:, :s]
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, a, b_vec, c_vec, state):
+    """Single-token recurrence: state' = exp(dt·A)·state + dt·(B ⊗ x).
+
+    x (B,H,P); dt (B,H); b_vec/c_vec (B,N); state (B,H,P,N)."""
+    dec = jnp.exp(dt * a)  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, b_vec, x)
+    new_state = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_vec, new_state)
+    return y, new_state
+
+
+def ssm_layer(params, x: jax.Array, spec, *, conv_state=None, ssm_state=None,
+              decode: bool = False):
+    """Full Mamba-2 block. x (B, S, D) → (out, (new_conv_state, new_ssm_state))."""
+    bsz, s, d = x.shape
+    di, n, h = spec.d_inner, spec.d_state, spec.n_heads
+    p = di // h
+    z = x @ params["w_z"]
+    xbc = jnp.concatenate([x @ params["w_x"], x @ params["w_B"], x @ params["w_C"]], -1)
+    xbc, new_conv = _depthwise_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs, bs, cs = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])  # (H,)
+    xh = xs.reshape(bsz, s, h, p)
+
+    if decode:
+        assert s == 1
+        y, new_state = ssd_decode_step(
+            xh[:, 0].astype(jnp.float32), dt[:, 0], a,
+            bs[:, 0].astype(jnp.float32), cs[:, 0].astype(jnp.float32),
+            ssm_state.astype(jnp.float32) if ssm_state is not None
+            else jnp.zeros((bsz, h, p, n), jnp.float32))
+        y = y[:, None]  # (B,1,H,P)
+    else:
+        y, new_state = ssd_chunked(xh, dt, a, bs, cs, spec.chunk, ssm_state)
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["w_out"], (new_conv, new_state)

@@ -1,0 +1,1 @@
+"""Serving: batched engine + split-computing engine."""

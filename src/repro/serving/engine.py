@@ -1,0 +1,79 @@
+"""Batched serving engine: prefill + autoregressive decode with KV caches.
+
+Requests are batched by equal prompt length (length bucketing — the
+production-standard strategy when no per-row attention masking is wired
+through). Sampling: greedy or temperature. ``serve_step`` (one decode step
+for the whole batch) is the function the dry-run lowers for the decode
+shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (RuntimeOpts, decode_step, init_caches,
+                                      prefill)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, prompt + generated)
+    steps: int
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, opts: RuntimeOpts = RuntimeOpts(),
+                 cache_len: int = 4096):
+        self.cfg = cfg
+        self.params = params
+        self.opts = opts
+        self.cache_len = cache_len
+        self._prefill = jax.jit(
+            lambda p, t, patches: prefill(p, cfg, t, patches, cache_len, opts))
+        self._step = jax.jit(
+            lambda p, t, caches, pos: decode_step(p, cfg, t, caches, pos, opts))
+
+    def _sample(self, logits, key, temperature: float):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 temperature: float = 0.0, patches=None, seed: int = 0,
+                 ) -> GenerationResult:
+        """``prompts``: (B, S) int32 (or (B, S, K) musicgen), equal lengths."""
+        tokens = jnp.asarray(prompts)
+        b, s = tokens.shape[:2]
+        assert s + max_new_tokens <= self.cache_len, "cache_len too small"
+        logits, caches = self._prefill(self.params, tokens,
+                                       None if patches is None else jnp.asarray(patches))
+        key = jax.random.PRNGKey(seed)
+        out = [tokens]
+        pos = s
+        for i in range(max_new_tokens):
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits, sub, temperature)  # (B,) or (B, K)
+            nxt = nxt[:, None].astype(tokens.dtype)  # (B, 1, ...)
+            out.append(nxt)
+            if i + 1 == max_new_tokens:
+                break
+            logits, caches = self._step(self.params, nxt, caches, jnp.int32(pos))
+            pos += 1
+        return GenerationResult(np.asarray(jnp.concatenate(out, axis=1)),
+                                max_new_tokens)
+
+
+def serve_step_fn(cfg: ArchConfig, opts: RuntimeOpts):
+    """The function lowered by the dry-run for decode shapes: one new token
+    against a full cache of ``cache_len`` (greedy head included)."""
+
+    def serve_step(params, tokens, caches, pos):
+        logits, new_caches = decode_step(params, cfg, tokens, caches, pos, opts)
+        return jnp.argmax(logits, axis=-1), new_caches
+
+    return serve_step

@@ -1,0 +1,228 @@
+"""Split-computing serving engine — the paper's system (§2, Fig. 3).
+
+The model is partitioned at OPSC's split point: *edge* runs blocks
+[0, split) with weights fake-quantized at Q_w1 (OPSC front segment), *cloud*
+runs blocks [split, L) at full precision. The split-layer hidden state is
+TS+TAB-Q compressed (``repro.core.payload``), its **measured** bit count
+drives the ε-outage channel latency model, and Algorithm 2's early-exit
+controller escalates (compress → drop KV → truncate generation) when the
+deadline would be violated.
+
+``I_kv`` semantics (paper §2.2.1, Eq. 2/3): the cloud is stateless across
+edge devices. With I_kv=1 the per-step uplink is accounted at the Eq. (2)
+KV-cache size and the cloud decodes incrementally from its (shipped)
+caches; with I_kv=0 only hidden states cross, and the cloud must re-run its
+segment over the whole received history each step — reproducing the paper's
+cache-vs-bandwidth tradeoff in both bytes *and* compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.channel import ChannelConfig, LatencyModel, optimal_rate
+from repro.core.opsc import OPSCConfig, kv_cache_bytes
+from repro.core.payload import decode as payload_decode
+from repro.core.payload import encode as payload_encode
+from repro.models import layers as L
+from repro.models.transformer import (RuntimeOpts, _apply_blocks_cached,
+                                      apply_head, embed_inputs, init_caches,
+                                      make_positions, rope_tables)
+
+
+def slice_blocks(tree, lo: int, hi: int):
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+
+def _fake_quant_blocks(blocks, bits: int):
+    """OPSC front-segment weight quantization (symmetric per-channel,
+    fake-quant semantics — see repro.core.opsc). ≥16 bits ≡ full precision
+    (the paper's high-precision segment)."""
+    from repro.core.quant import quantize_sym
+
+    if bits >= 16:
+        return blocks
+
+    def fq(x):
+        if x.ndim < 3:  # stacked (nb, ...) matrices only; norms/scalars stay
+            return x
+        flat = x.reshape(x.shape[0], -1, x.shape[-1])
+        qt = quantize_sym(flat, bits, axis=-2)  # per-output-channel scale
+        return qt.dequantize(x.dtype).reshape(x.shape)
+
+    return jax.tree_util.tree_map(fq, blocks)
+
+
+@dataclasses.dataclass
+class SplitStats:
+    tokens_generated: int = 0
+    uplink_bits_measured: float = 0.0  # real TS+TAB-Q payload bits
+    uplink_bits_eq3: float = 0.0  # paper's analytical accounting
+    latency_s: float = 0.0
+    early_exits: int = 0
+    kv_dropped_steps: int = 0
+
+
+class SplitEngine:
+    def __init__(self, cfg: ArchConfig, params, opsc: OPSCConfig,
+                 channel: ChannelConfig = ChannelConfig(),
+                 deadline_s: float | None = None,
+                 compute_per_layer_s: float = 1e-4,
+                 opts: RuntimeOpts = RuntimeOpts(remat=False),
+                 cache_len: int = 4096):
+        assert opsc.split_layer % len(cfg.pattern) == 0, \
+            "split point must fall on a pattern boundary"
+        self.cfg, self.opts, self.opsc = cfg, opts, opsc
+        self.cache_len = cache_len
+        self.split_block = opsc.split_layer // len(cfg.pattern)
+        nb = cfg.num_blocks
+
+        self.edge_params = dict(params)
+        self.edge_params["blocks"] = _fake_quant_blocks(
+            slice_blocks(params["blocks"], 0, self.split_block), opsc.qw_front)
+        self.cloud_params = dict(params)
+        self.cloud_params["blocks"] = slice_blocks(params["blocks"], self.split_block, nb)
+
+        self.channel = channel
+        self.rate = optimal_rate(channel)
+        self.latency = LatencyModel(channel, self.rate, compute_per_layer_s)
+        self.deadline_s = deadline_s
+
+        self._edge_front = jax.jit(self._edge_front_fn, static_argnames=("decode",))
+        self._cloud_back = jax.jit(self._cloud_back_fn, static_argnames=("decode",))
+
+    # ------------------------------------------------------------- stages
+
+    def _edge_front_fn(self, params_blocks, embed_params, tokens, caches, pos,
+                       patches=None, decode=False):
+        cfg, opts = self.cfg, self.opts
+        b, s = tokens.shape[:2]
+        positions = make_positions(cfg, b, s, offset=pos)
+        x = embed_inputs(cfg, embed_params, tokens, patches, positions)
+        rope_cs = rope_tables(cfg, positions)
+        x, caches = _apply_blocks_cached(cfg, params_blocks, x, caches,
+                                         rope_cs=rope_cs, q_positions=positions,
+                                         pos=jnp.asarray(pos, jnp.int32),
+                                         opts=opts, decode=decode)
+        return x, caches
+
+    def _cloud_back_fn(self, params_blocks, head_params, h, caches, pos, decode=False):
+        cfg, opts = self.cfg, self.opts
+        b, s = h.shape[:2]
+        positions = make_positions(cfg, b, s, offset=pos)
+        rope_cs = rope_tables(cfg, positions)
+        x, caches = _apply_blocks_cached(cfg, params_blocks, h, caches,
+                                         rope_cs=rope_cs, q_positions=positions,
+                                         pos=jnp.asarray(pos, jnp.int32),
+                                         opts=opts, decode=decode)
+        logits = apply_head(cfg, head_params, x[:, -1:])
+        return logits[:, 0], caches
+
+    # ------------------------------------------------------------ payload
+
+    def _compress(self, h: jax.Array, fixed_bits=None):
+        b, s, d = h.shape
+        p = payload_encode(h.reshape(b * s, d).astype(jnp.float32),
+                           tau=self.opsc.tau, delta=self.opsc.delta,
+                           max_bits=self.opsc.max_act_bits, fixed_bits=fixed_bits)
+        rec = payload_decode(p).reshape(b, s, d).astype(h.dtype)
+        return rec, float(p.payload_bits())
+
+    def _eq3_bits(self, w: int, i_kv: int) -> float:
+        c = self.cfg
+        attn = [ls.mixer for ls in c.pattern if ls.mixer.kind == "attn"]
+        hd = (attn[0].num_kv_heads * attn[0].head_dim) if attn else c.d_model
+        from repro.core.opsc import payload_bytes
+
+        return payload_bytes(w, self.opsc.split_layer, c.num_layers, hd,
+                             c.d_model, self.opsc.qa_front, self.opsc.qa_back,
+                             i_kv) * 8.0
+
+    # ----------------------------------------------------------- generate
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 compress: bool = True) -> tuple:
+        """Greedy split-computing generation. Returns (tokens, SplitStats)."""
+        cfg, opts = self.cfg, self.opts
+        tokens = jnp.asarray(prompts)
+        b, s = tokens.shape[:2]
+        stats = SplitStats()
+
+        nfront, nback = self.split_block, cfg.num_blocks - self.split_block
+        edge_caches = jax.tree_util.tree_map(
+            lambda a: a[:nfront], init_caches(cfg, b, self.cache_len, opts))
+        cloud_caches = jax.tree_util.tree_map(
+            lambda a: a[nfront:], init_caches(cfg, b, self.cache_len, opts))
+
+        # ---- prefill both segments (prompt flows through the same uplink)
+        h, edge_caches = self._edge_front(self.edge_params["blocks"],
+                                          self.edge_params, tokens, edge_caches,
+                                          jnp.int32(0), decode=False)
+        if compress:
+            h, bits = self._compress(h)
+        else:
+            bits = float(h.size * 16)  # uncompressed fp16 uplink
+        stats.uplink_bits_measured += bits
+        logits, cloud_caches = self._cloud_back(self.cloud_params["blocks"],
+                                                self.cloud_params, h, cloud_caches,
+                                                jnp.int32(0), decode=False)
+        stats.uplink_bits_eq3 += self._eq3_bits(s, self.opsc.i_kv)
+
+        h_history = [h]  # kept for the stateless-cloud (I_kv=0) fallback
+        out = [np.asarray(tokens)]
+        i_kv = self.opsc.i_kv
+        pos = s
+        for step in range(max_new_tokens):
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
+            out.append(np.asarray(nxt))
+            if step + 1 == max_new_tokens:
+                break
+            h, edge_caches = self._edge_front(self.edge_params["blocks"],
+                                              self.edge_params, nxt, edge_caches,
+                                              jnp.int32(pos), decode=True)
+            fixed_bits = None
+            if compress:
+                h_c, bits = self._compress(h, fixed_bits)
+            else:
+                h_c, bits = h, float(h.size * 16)
+            # Algorithm 2 ladder on the *modeled* total latency
+            w = pos + 1
+            if self.deadline_s is not None:
+                lat = self.latency.total_latency(w, self.opsc.split_layer, bits)
+                if lat > self.deadline_s and i_kv == 1:
+                    i_kv = 0  # drop KV from the uplink accounting
+                    stats.kv_dropped_steps += 1
+                    lat = self.latency.total_latency(
+                        w, self.opsc.split_layer, self._eq3_bits(w, 0))
+                if lat > self.deadline_s:
+                    stats.early_exits += 1
+                    stats.latency_s += lat
+                    break
+                stats.latency_s += lat
+            stats.uplink_bits_measured += bits
+            stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
+
+            h_history.append(h_c)
+            if i_kv:
+                logits, cloud_caches = self._cloud_back(
+                    self.cloud_params["blocks"], self.cloud_params, h_c,
+                    cloud_caches, jnp.int32(pos), decode=True)
+            else:
+                # stateless cloud: re-run the back segment over the history
+                # (the paper's "losing the benefits of the cache")
+                hist = jnp.concatenate(h_history, axis=1)
+                fresh = jax.tree_util.tree_map(
+                    lambda a: a[self.split_block:],
+                    init_caches(cfg, b, self.cache_len, opts))
+                logits, _ = self._cloud_back(self.cloud_params["blocks"],
+                                             self.cloud_params, hist, fresh,
+                                             jnp.int32(0), decode=False)
+            pos += 1
+            stats.tokens_generated += 1
+
+        return np.concatenate(out, axis=1), stats

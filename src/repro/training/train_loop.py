@@ -1,0 +1,115 @@
+"""Training loop: loss, microbatched gradient accumulation, train_step.
+
+``train_step`` is the function the multi-pod dry-run lowers for the
+``train_4k`` shape: the global batch is reshaped to (accum, micro, S) and a
+``lax.scan`` accumulates gradients — per-device logits stay bounded even at
+vocab 256k × 1M tokens (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import RuntimeOpts, forward_train
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, loss_mask: jax.Array):
+    """Masked next-token CE. Handles the musicgen codebook axis (labels get an
+    extra trailing K dim, logits (..., K, V))."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    while nll.ndim > loss_mask.ndim:  # codebook axis → average
+        nll = nll.mean(axis=-1)
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum(nll * loss_mask) / denom
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, opts: RuntimeOpts,
+            aux_weight: float = 0.01):
+    logits, aux = forward_train(params, cfg, batch["tokens"],
+                                batch.get("patches"), opts)
+    ce = cross_entropy(logits, batch["labels"], batch["loss_mask"])
+    return ce + aux_weight * aux, (ce, aux)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    accum_steps: int = 1  # microbatches per step
+    aux_weight: float = 0.01
+    batch_pre_split: bool = False  # batch already (accum, micro, ...) shaped
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def r(x):
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+    return {k: r(v) for k, v in batch.items() if v is not None}
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig, opts: RuntimeOpts):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics). Not jitted here — the caller jits with shardings (launcher) or
+    plainly (tests/examples)."""
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: loss_fn(p, cfg, mb, opts, tc.aux_weight), has_aux=True)
+
+        if tc.accum_steps == 1:
+            (loss, (ce, aux)), grads = grad_fn(params, batch)
+        else:
+            micro = (batch if tc.batch_pre_split
+                     else _split_microbatches(batch, tc.accum_steps))
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, (ce, aux)), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + jnp.stack([l, ce, aux])), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, sums), _ = jax.lax.scan(body, (g0, jnp.zeros(3)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / tc.accum_steps, grads)
+            loss, ce, aux = sums / tc.accum_steps
+
+        new_params, new_state, om = adamw_update(tc.optimizer, grads, opt_state, params)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, key, dtype=jnp.float32):
+    from repro.models.transformer import init_params
+
+    params = init_params(cfg, key, dtype)
+    return params, adamw_init(params)
+
+
+def train(cfg: ArchConfig, loader, tc: TrainConfig, opts: RuntimeOpts,
+          key=None, log_every: int = 20, params=None, opt_state=None):
+    """Simple single-host training driver (examples/tests use this; the
+    multi-pod launcher in repro.launch wires the same step through pjit)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params, opt_state = init_train_state(cfg, key)
+    step_fn = jax.jit(make_train_step(cfg, tc, opts))
+    history = []
+    for i, batch in enumerate(loader):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or True:
+            history.append({k: float(v) for k, v in metrics.items()})
+        if i % log_every == 0:
+            print(f"step {i:5d} loss {history[-1]['loss']:.4f} "
+                  f"ce {history[-1]['ce']:.4f} lr {history[-1]['lr']:.2e}")
+    return params, opt_state, history

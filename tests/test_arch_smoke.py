@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: instantiate the REDUCED (tiny) variant of
+each assigned family (≤2 layers, d_model ≤ 512, ≤4 experts) and run one
+forward/train step + one prefill/decode step on CPU, asserting output shapes
+and absence of NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models.transformer import (RuntimeOpts, decode_step, forward_train,
+                                      init_params, prefill)
+
+OPTS = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False, moe_capacity_factor=0.0)
+BATCH, SEQ = 2, 24
+
+
+def _make_inputs(cfg, b=BATCH, s=SEQ, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.embed == "musicgen":
+        tokens = rng.integers(0, cfg.vocab_size, (b, s, cfg.num_codebooks))
+        return jnp.asarray(tokens, jnp.int32), None
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    patches = None
+    if cfg.embed == "vlm":
+        patches = jnp.asarray(rng.normal(size=(b, cfg.num_patches, cfg.d_vision)),
+                              jnp.float32)
+    return tokens, patches
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).tiny()
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ASSIGNED + ["llama2-7b"])
+def test_forward_shapes_and_no_nans(arch_state, name):
+    cfg, params = arch_state(name)
+    tokens, patches = _make_inputs(cfg)
+    logits, aux = forward_train(params, cfg, tokens, patches, OPTS)
+    if cfg.num_codebooks > 1:
+        assert logits.shape == (BATCH, SEQ, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (BATCH, SEQ, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ASSIGNED + ["llama2-7b"])
+def test_train_step_no_nans(arch_state, name):
+    cfg, params = arch_state(name)
+    tokens, patches = _make_inputs(cfg)
+
+    def loss_fn(p):
+        logits, aux = forward_train(p, cfg, tokens, patches, OPTS)
+        if cfg.num_codebooks > 1:
+            labels = tokens[:, 1:]
+            lp = jax.nn.log_softmax(logits[:, :-1])
+            ce = -jnp.mean(jnp.take_along_axis(lp, labels[..., None], -1))
+        else:
+            labels = tokens[:, 1:]
+            lp = jax.nn.log_softmax(logits[:, :-1])
+            ce = -jnp.mean(jnp.take_along_axis(lp, labels[..., None], -1))
+        return ce + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    # at least the embedding gradient must be non-zero
+    assert float(jnp.max(jnp.abs(grads["embed"]))) > 0
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_prefill_decode_consistency(arch_state, name):
+    """prefill(S tokens) + decode(token S) must match forward on S+1 tokens."""
+    cfg, params = arch_state(name)
+    tokens, patches = _make_inputs(cfg, s=SEQ + 1)
+    full_logits, _ = forward_train(params, cfg, tokens, patches, OPTS)
+
+    last, caches = prefill(params, cfg, tokens[:, :SEQ], patches,
+                           cache_len=SEQ + 8, opts=OPTS)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full_logits[:, SEQ - 1]),
+                               rtol=2e-2, atol=5e-3)
+    step_logits, caches = decode_step(params, cfg, tokens[:, SEQ:SEQ + 1], caches,
+                                      jnp.int32(SEQ), OPTS)
+    np.testing.assert_allclose(np.asarray(step_logits), np.asarray(full_logits[:, SEQ]),
+                               rtol=2e-2, atol=5e-3)
+
+
+@pytest.mark.parametrize("name", ["gemma2-2b", "internlm2-20b", "jamba-v0.1-52b"])
+def test_quantized_kv_decode_close(arch_state, name):
+    """int8 KV cache (the paper's Q^a on the cache) ≈ bf16 cache decode."""
+    cfg, params = arch_state(name)
+    tokens, patches = _make_inputs(cfg, s=SEQ + 1)
+    opts_q = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False, quantized_kv=True,
+                         moe_capacity_factor=0.0)
+
+    _, caches = prefill(params, cfg, tokens[:, :SEQ], patches, cache_len=SEQ + 8,
+                        opts=OPTS)
+    ref, _ = decode_step(params, cfg, tokens[:, SEQ:SEQ + 1], caches, jnp.int32(SEQ), OPTS)
+
+    _, caches_q = prefill(params, cfg, tokens[:, :SEQ], patches, cache_len=SEQ + 8,
+                          opts=opts_q)
+    out, _ = decode_step(params, cfg, tokens[:, SEQ:SEQ + 1], caches_q, jnp.int32(SEQ),
+                         opts_q)
+    # int8 cache error is small relative to the logit scale
+    scale = float(jnp.maximum(jnp.max(jnp.abs(ref)), 1e-3))
+    assert float(jnp.max(jnp.abs(out - ref))) / scale < 0.08
+
+
+def test_sliding_window_masks_distant_tokens():
+    """A distant token outside the window must not influence the output."""
+    cfg = get_config("h2o-danube-3-4b").tiny()  # window 16 in tiny
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    s = 40  # > window 16
+    base = rng.integers(0, cfg.vocab_size, (1, s))
+    pert = base.copy()
+    pert[0, 0] = (pert[0, 0] + 7) % cfg.vocab_size  # token 0 is > window away
+    la, _ = forward_train(params, cfg, jnp.asarray(base, jnp.int32), None, OPTS)
+    lb, _ = forward_train(params, cfg, jnp.asarray(pert, jnp.int32), None, OPTS)
+    np.testing.assert_allclose(np.asarray(la[0, -1]), np.asarray(lb[0, -1]),
+                               rtol=1e-4, atol=1e-4)
+    assert float(jnp.max(jnp.abs(la[0, 1] - lb[0, 1]))) > 1e-4  # nearby differs
+
+
+def test_param_counts_match_assignment():
+    """Full-size configs roughly match the assigned parameter scales."""
+    import math
+
+    expect = {
+        "gemma2-2b": (2.0e9, 3.5e9),
+        "qwen2-vl-2b": (1.2e9, 2.3e9),
+        "qwen3-moe-235b-a22b": (2.0e11, 2.6e11),
+        "qwen2-moe-a2.7b": (1.1e10, 1.6e10),
+        "h2o-danube-3-4b": (3.5e9, 4.5e9),
+        "granite-34b": (3.0e10, 4.0e10),
+        "mamba2-780m": (6.5e8, 9.5e8),
+        "musicgen-medium": (1.3e9, 2.1e9),
+        "jamba-v0.1-52b": (4.5e10, 6.0e10),
+        "internlm2-20b": (1.7e10, 2.3e10),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).total_params()
+        assert lo <= n <= hi, f"{name}: {n / 1e9:.2f}B outside [{lo / 1e9}, {hi / 1e9}]"
+    # MoE active params
+    active = get_config("qwen3-moe-235b-a22b").total_params(active=True)
+    assert 1.5e10 <= active <= 3.0e10  # ≈22B active

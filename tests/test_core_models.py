@@ -1,0 +1,129 @@
+"""Tests for the analytical models: OPSC memory (Eq. 1-3), channel (Eq. 9-13),
+unified split optimization (Eq. 8) and the early-exit controller (Alg. 2)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.channel import (ChannelConfig, LatencyModel, optimal_rate,
+                                outage_probability, worst_case_latency)
+from repro.core.early_exit import EarlyExitController, default_payload_bits_fn
+from repro.core.opsc import (OPSCConfig, edge_weight_memory_bytes,
+                             kv_cache_bytes, payload_bytes,
+                             weight_memory_bytes)
+from repro.core.split_optimizer import SplitSearchSpace, optimize_split, psi
+
+L, HD, DMODEL = 32, 4096, 4096
+COUNTS = [202 * 10 ** 6] * L  # llama2-7b-ish per-layer params
+
+
+def test_eq1_weight_memory_endpoints():
+    total = sum(COUNTS)
+    # split at 0 → everything at back precision; at L → everything at front
+    assert weight_memory_bytes(COUNTS, 0, 4, 16) == total * 16 // 8
+    assert weight_memory_bytes(COUNTS, L, 4, 16) == total * 4 // 8
+    # monotone decreasing in ℓ when front bits < back bits
+    vals = [weight_memory_bytes(COUNTS, e, 4, 16) for e in range(L + 1)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+
+
+def test_eq2_kv_cache_grows_linearly_in_w():
+    b1 = kv_cache_bytes(10, 16, L, HD, 4, 16)
+    b2 = kv_cache_bytes(20, 16, L, HD, 4, 16)
+    b3 = kv_cache_bytes(30, 16, L, HD, 4, 16)
+    assert (b3 - b2) == (b2 - b1)  # linear growth
+    assert b1 > 0
+
+
+def test_eq2_front_bits_reduce_memory():
+    hi = kv_cache_bytes(100, 16, L, HD, 16, 16)
+    lo = kv_cache_bytes(100, 16, L, HD, 4, 16)
+    assert lo < hi
+
+
+def test_eq3_ikv_switch():
+    w = 64
+    with_kv = payload_bytes(w, 16, L, HD, DMODEL, 4, 16, i_kv=1)
+    without = payload_bytes(w, 16, L, HD, DMODEL, 4, 16, i_kv=0)
+    # paper's Eq. (2) case rule: Q_{a,k} = Q_a2 for k ≥ ℓ_w, and the payload
+    # is indexed at the split layer itself → back bits
+    assert without == w * DMODEL * 16 // 8
+    assert with_kv > without  # KV cache across layers dwarfs one hidden state
+
+
+def test_channel_outage_monotone_in_rate():
+    cfg = ChannelConfig()
+    rates = [1e5, 1e6, 1e7, 5e7]
+    po = [outage_probability(r, cfg) for r in rates]
+    assert all(a < b for a, b in zip(po, po[1:]))
+    assert 0.0 <= po[0] <= po[-1] <= 1.0
+
+
+def test_channel_latency_tradeoff_and_rstar():
+    cfg = ChannelConfig()
+    r_star = optimal_rate(cfg)
+    l_star = worst_case_latency(8e6, r_star, cfg)
+    for r in (cfg.r_min * 2, r_star / 3, r_star * 3, cfg.r_max / 2):
+        assert l_star <= worst_case_latency(8e6, r, cfg) * 1.0001
+    assert cfg.r_min <= r_star <= cfg.r_max
+
+
+@settings(max_examples=20, deadline=None)
+@given(snr=st.floats(1.0, 100.0), bw=st.floats(1e6, 50e6))
+def test_channel_latency_positive_property(snr, bw):
+    cfg = ChannelConfig(bandwidth_hz=bw, snr=snr)
+    r = optimal_rate(cfg, n_grid=512)
+    assert worst_case_latency(1e6, r, cfg) > 0
+
+
+def test_eq8_optimizer_respects_constraints():
+    budget = 3 * 2 ** 30  # 3 GiB edge
+    # accuracy model: quantizing more layers at low bits hurts; back-quant hurts more
+    def acc(cfg: OPSCConfig) -> float:
+        frac_front = cfg.split_layer / L
+        drop = 0.02 * frac_front * (16 - cfg.qw_front) / 12
+        drop += 0.001 * (16 - cfg.qa_front) / 14
+        return 0.70 - drop
+
+    sol = optimize_split(
+        num_layers=L, layer_param_counts=COUNTS, embed_params=131 * 10 ** 6,
+        kv_heads_dim=HD, max_tokens=256, memory_budget_bytes=budget,
+        accuracy_fn=acc, base_accuracy=0.70, accuracy_drop=0.02,
+        space=SplitSearchSpace(split_layers=range(4, L, 4)),
+    )
+    assert sol is not None
+    assert sol.memory_bytes <= budget
+    assert sol.accuracy >= 0.70 - 0.02
+    # Ψ is the objective: no feasible config with the same search space beats it
+    assert sol.psi == psi(L, sol.config.split_layer, sol.config.qa_front, sol.config.qa_back)
+
+
+def test_eq8_infeasible_returns_none():
+    sol = optimize_split(
+        num_layers=L, layer_param_counts=COUNTS, embed_params=0, kv_heads_dim=HD,
+        max_tokens=256, memory_budget_bytes=1024,  # 1 KiB — impossible
+        accuracy_fn=lambda c: 1.0, base_accuracy=0.5, accuracy_drop=0.5,
+        space=SplitSearchSpace(split_layers=[8, 16]),
+    )
+    assert sol is None
+
+
+def test_early_exit_ladder():
+    opsc = OPSCConfig(split_layer=16)
+    cfg = ChannelConfig()
+    lat = LatencyModel(cfg, optimal_rate(cfg), compute_per_token_s=1e-5)
+    payload_fn = default_payload_bits_fn(opsc, L, HD, DMODEL, compression_ratio=6.0)
+
+    def run(deadline):
+        return EarlyExitController(opsc, lat, deadline, L, payload_fn).decide(w_max=64)
+
+    generous = run(deadline=1e6)
+    assert not generous.exited_early and not generous.compressed and generous.i_kv == 1
+    medium = run(deadline=generous.latency_s / 3)
+    assert medium.compressed
+    tight = run(deadline=1e-4)
+    assert tight.exited_early and tight.w < 64 and tight.i_kv == 0
+    # escalation never violates the deadline unless fully exhausted (w == 1)
+    assert tight.latency_s <= 1e-4 or tight.w == 1

@@ -1,0 +1,143 @@
+"""Tests for threshold splitting (Eq. 4/7), TAB-Q (Alg. 1) and the payload codec."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.payload import (Payload, decode, encode, encode_decode_ste,
+                                entropy_bound_bits)
+from repro.core.tabq import tabq, tabq_fixed
+from repro.core.ts import reconstruct, split_dense, ts_decode, ts_encode
+
+
+def _mk(rows=32, d=64, seed=0, outliers=8, outlier_mag=50.0):
+    rng = np.random.default_rng(seed)
+    t = rng.normal(size=(rows, d)).astype(np.float32)
+    flat = t.reshape(-1)
+    idx = rng.choice(flat.size, size=outliers, replace=False)
+    flat[idx] = outlier_mag * np.sign(flat[idx])
+    return jnp.asarray(flat.reshape(rows, d))
+
+
+# ---------------------------------------------------------------- TS ------
+
+
+def test_split_dense_partition_is_exact():
+    t = _mk()
+    above, below, m = split_dense(t, tau=5.0)
+    np.testing.assert_allclose(np.asarray(above + below), np.asarray(t), rtol=1e-6)
+    assert float(jnp.max(jnp.abs(below))) < 5.0
+
+
+def test_ts_encode_decode_exact_roundtrip():
+    t = _mk(outliers=10)
+    below, above = ts_encode(t, tau=5.0, capacity=32)
+    assert int(above.count) == 10
+    dense_above = ts_decode(above)
+    np.testing.assert_allclose(np.asarray(below + dense_above), np.asarray(t), rtol=1e-6)
+    # below really has the big values removed
+    assert float(jnp.max(jnp.abs(below))) < 5.0
+
+
+def test_ts_capacity_overflow_keeps_largest():
+    t = _mk(outliers=20, outlier_mag=50.0)
+    # add a few even larger entries
+    t = t.at[0, :4].set(jnp.asarray([500.0, -400.0, 300.0, 200.0]))
+    below, above = ts_encode(t, tau=5.0, capacity=4)
+    kept = np.sort(np.abs(np.asarray(above.values)))
+    np.testing.assert_allclose(kept, [200.0, 300.0, 400.0, 500.0])
+    assert int(above.count) == 24  # true nnz still reported
+
+
+def test_reconstruct_matches_eq7():
+    t = _mk(outliers=6)
+    below, above = ts_encode(t, tau=5.0, capacity=16)
+    rec = reconstruct(below, above)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(t), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tau=st.floats(min_value=0.5, max_value=20.0), seed=st.integers(0, 100))
+def test_ts_property_roundtrip(tau, seed):
+    t = _mk(seed=seed, outliers=5, outlier_mag=30.0)
+    below, above = ts_encode(t, tau=tau, capacity=t.size)  # ample capacity
+    rec = reconstruct(below, above)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(t), rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- TAB-Q -----
+
+
+def test_tabq_respects_distortion_tolerance_direction():
+    t = jnp.abs(_mk(outliers=0)) + 0.1
+    loose = tabq(t, max_bits=8, delta=10.0)
+    tight = tabq(t, max_bits=8, delta=0.0)
+    # looser tolerance → fewer (or equal) bits everywhere
+    assert int(jnp.max(loose.bits)) <= int(jnp.min(tight.bits))
+    assert int(jnp.max(tight.bits)) == 8  # δ>0 for any reduction → stays at Q̄
+
+
+def test_tabq_dequant_error_small_at_high_bits():
+    t = _mk(outliers=0)
+    q = tabq_fixed(t, bits=8)
+    rec = q.dequantize()
+    err = float(jnp.max(jnp.abs(rec - t)))
+    assert err < float(jnp.max(jnp.abs(t))) / 40
+
+
+def test_tabq_per_token_bits_vary_with_token_stats():
+    rng = np.random.default_rng(9)
+    smooth = np.full((1, 64), 1.0, np.float32) + rng.normal(size=(1, 64)).astype(np.float32) * 1e-4
+    spiky = rng.normal(size=(1, 64)).astype(np.float32) * 10
+    t = jnp.asarray(np.concatenate([smooth, spiky]))
+    q = tabq(t, max_bits=8, delta=0.05)
+    assert int(q.bits[0]) <= int(q.bits[1])
+
+
+def test_tabq_payload_bits_accounting():
+    t = _mk(outliers=0, rows=4, d=32)
+    q = tabq_fixed(t, bits=6)
+    expect = 4 * 32 * 6 + 4 * (64 + 8)
+    assert int(q.payload_bits()) == expect
+
+
+# ------------------------------------------------------------- payload ----
+
+
+def test_payload_roundtrip_close_and_outliers_exact():
+    t = _mk(outliers=8, outlier_mag=80.0)
+    p = encode(t, tau=5.0, delta=0.05, max_bits=8, capacity=32)
+    rec = decode(p)
+    # outliers reinstated exactly
+    mask = np.abs(np.asarray(t)) >= 5.0
+    np.testing.assert_allclose(np.asarray(rec)[mask], np.asarray(t)[mask], rtol=1e-6)
+    # body error bounded by the TAB-Q step
+    body_err = np.max(np.abs((np.asarray(rec) - np.asarray(t))[~mask]))
+    assert body_err < 0.6
+
+
+def test_payload_compression_ratio_beats_fp16():
+    t = _mk(rows=128, d=256, outliers=16, outlier_mag=60.0)
+    p = encode(t, tau=5.0, delta=0.2, max_bits=6)
+    raw_bits = t.size * 16
+    assert int(p.payload_bits()) < raw_bits / 2  # ≥2× vs fp16
+
+
+def test_ste_gradient_is_identity():
+    import jax
+
+    t = _mk(rows=8, d=16, outliers=2)
+
+    def f(x):
+        return jnp.sum(encode_decode_ste(x, tau=5.0, max_bits=8) ** 2)
+
+    g = jax.grad(f)(t)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * decode(encode(t, tau=5.0, max_bits=8))), rtol=1e-4)
+
+
+def test_entropy_bound_below_raw_bits():
+    t = _mk(rows=64, d=64, outliers=0)
+    q = tabq_fixed(t, bits=8)
+    h = float(entropy_bound_bits(q))
+    assert h <= float(q.payload_bits()) * 1.01

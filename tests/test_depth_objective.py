@@ -1,0 +1,60 @@
+"""Tests for the Eq. (12) depth objective solver (max w·ℓ s.t. L_t ≤ D)."""
+
+import pytest
+
+from repro.core.channel import ChannelConfig, LatencyModel, optimal_rate
+from repro.core.early_exit import solve_depth_objective
+
+
+def _model(compute_s=1e-4):
+    cfg = ChannelConfig()
+    return LatencyModel(cfg, optimal_rate(cfg), compute_s)
+
+
+def _bits_fn(w, ell, i_kv, compressed):
+    base = w * 4096 * 8.0  # hidden-state payload grows with w
+    return base / (4.0 if compressed else 1.0)
+
+
+def test_depth_objective_monotone_in_deadline():
+    lat = _model()
+    prods = []
+    for d in (0.01, 0.1, 1.0, 10.0):
+        sol = solve_depth_objective(lat, _bits_fn, d, w_max=256, num_layers=32)
+        prods.append(0 if sol is None else sol[0] * sol[1])
+    assert prods == sorted(prods)
+    assert prods[-1] == 256 * 32  # generous deadline → full depth
+
+
+def test_depth_objective_respects_deadline():
+    lat = _model(compute_s=1e-3)
+    d = 0.15
+    sol = solve_depth_objective(lat, _bits_fn, d, w_max=128, num_layers=16)
+    assert sol is not None
+    w, ell, t = sol
+    assert t <= d
+    # optimality vs brute force
+    best = 0
+    from repro.core.channel import worst_case_latency
+
+    for e in range(1, 17):
+        for ww in range(1, 129):
+            lt = lat.compute_per_token_s * e + worst_case_latency(
+                _bits_fn(ww, e, 1, True), lat.rate, lat.channel)
+            if lt <= d:
+                best = max(best, ww * e)
+    assert w * ell == best
+
+
+def test_depth_objective_infeasible():
+    lat = _model(compute_s=10.0)  # one layer already busts the deadline
+    sol = solve_depth_objective(lat, _bits_fn, 1.0, w_max=8, num_layers=4)
+    assert sol is None
+
+
+def test_compression_increases_depth():
+    lat = _model()
+    d = 0.2
+    s_raw = solve_depth_objective(lat, _bits_fn, d, 512, 32, compressed=False)
+    s_cmp = solve_depth_objective(lat, _bits_fn, d, 512, 32, compressed=True)
+    assert (0 if s_raw is None else s_raw[0] * s_raw[1]) <= s_cmp[0] * s_cmp[1]

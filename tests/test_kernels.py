@@ -1,0 +1,166 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+pure-jnp oracles in repro.kernels.ref (kernels run interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import dequant_matmul, tabq_dequantize, tabq_quantize, ts_mask
+
+SHAPES_TD = [(8, 128), (16, 256), (32, 384), (64, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, dtype, seed=0, scale=3.0, outliers=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32) * scale
+    if outliers:
+        flat = x.reshape(-1)
+        idx = rng.choice(flat.size, outliers, replace=False)
+        flat[idx] = 80.0 * np.sign(flat[idx])
+    return jnp.asarray(x, dtype)
+
+
+# ------------------------------------------------------------ tabq kernel
+
+
+@pytest.mark.parametrize("shape", SHAPES_TD)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", [4, 8])
+def test_tabq_kernel_matches_ref(shape, dtype, bits):
+    x = _rand(shape, dtype, seed=shape[0] + bits)
+    codes, s, z, sign = tabq_quantize(x, bits=bits)
+    rc, rs, rz, rsign = ref.tabq_quantize_ref(x, bits)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(rz), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sign), np.asarray(rsign))
+    np.testing.assert_allclose(np.asarray(codes), np.asarray(rc), atol=1)
+    # end-to-end dequant error bounded by one step
+    out = tabq_dequantize(codes, s, z, sign)
+    rout = ref.tabq_dequantize_ref(rc, rs, rz, rsign)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rout),
+                               atol=float(jnp.max(s)) * 1.5)
+
+
+def test_tabq_kernel_block_sweep():
+    x = _rand((64, 128), jnp.float32, seed=9)
+    outs = [tabq_quantize(x, bits=6, block_t=bt)[0] for bt in (8, 16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+
+
+# --------------------------------------------------- dequant matmul kernel
+
+
+@pytest.mark.parametrize("mnk", [(128, 128, 512), (256, 128, 1024),
+                                 (128, 256, 512), (8, 128, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dequant_matmul_matches_ref(mnk, dtype):
+    m, n, k = mnk
+    rng = np.random.default_rng(m + n)
+    x = _rand((m, k), dtype, seed=m)
+    codes = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.001, 0.1, (n,)), jnp.float32)
+    bm = min(128, m)
+    got = dequant_matmul(x, codes, scale, block_m=bm)
+    want = ref.dequant_matmul_ref(x, codes, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-3 * float(jnp.max(jnp.abs(want))))
+
+
+def test_dequant_matmul_block_shapes_agree():
+    m, n, k = 256, 256, 1024
+    rng = np.random.default_rng(3)
+    x = _rand((m, k), jnp.float32, seed=5)
+    codes = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    scale = jnp.asarray(rng.uniform(0.001, 0.1, (n,)), jnp.float32)
+    base = dequant_matmul(x, codes, scale, 128, 128, 512)
+    for bm, bn, bk in [(64, 128, 256), (128, 64, 1024), (256, 256, 512)]:
+        out = dequant_matmul(x, codes, scale, bm, bn, bk)
+        # different block_k → different f32 summation order
+        np.testing.assert_allclose(np.asarray(base), np.asarray(out),
+                                   rtol=1e-4, atol=1e-2)
+
+
+def test_dequant_matmul_equals_quantize_then_matmul():
+    """End-to-end: quantize_sym(axis=0) + kernel ≈ full-precision matmul."""
+    from repro.core.quant import quantize_sym
+
+    rng = np.random.default_rng(11)
+    x = _rand((64, 256), jnp.float32, seed=13, scale=1.0)
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    qt = quantize_sym(w, 8, axis=0)  # per-out-channel scale (1, N)
+    got = dequant_matmul(x, qt.codes, qt.scale[0], block_k=256)
+    want = x @ w
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.01
+
+
+# ----------------------------------------------------------- ts_mask kernel
+
+
+@pytest.mark.parametrize("shape", SHAPES_TD)
+@pytest.mark.parametrize("tau", [1.0, 5.0, 50.0])
+def test_ts_mask_matches_ref(shape, tau):
+    x = _rand(shape, jnp.float32, seed=int(tau) + shape[1], outliers=6)
+    below, mask, counts = ts_mask(x, tau)
+    rbelow, rmask, rcount = ref.ts_mask_ref(x, tau)
+    np.testing.assert_allclose(np.asarray(below), np.asarray(rbelow), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(rmask))
+    assert int(jnp.sum(counts)) == int(rcount)
+
+
+def test_ts_mask_counts_per_tile():
+    x = jnp.zeros((16, 128))
+    x = x.at[0, 0].set(100.0).at[9, 5].set(-100.0)
+    below, mask, counts = ts_mask(x, tau=50.0, block_t=8)
+    assert counts.shape == (2, 1)
+    assert int(counts[0, 0]) == 1 and int(counts[1, 0]) == 1
+
+
+# ----------------------------------------------- decode attention kernel
+
+
+@pytest.mark.parametrize("s,bs", [(64, 64), (128, 32), (256, 64)])
+@pytest.mark.parametrize("g,kh", [(4, 2), (6, 1), (1, 4)])
+def test_decode_attention_matches_ref(s, bs, g, kh):
+    from repro.kernels.ops import decode_attention
+
+    rng = np.random.default_rng(s + g)
+    b, hd = 2, 64
+    q = jnp.asarray(rng.normal(size=(b, kh, g, hd)), jnp.float32)
+    kc = jnp.asarray(rng.integers(-127, 128, (b, kh, s, hd)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, (b, kh, s, hd)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.02, (b, kh, s)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.02, (b, kh, s)), jnp.float32)
+    # half-filled cache with a ring-style hole
+    pos = np.arange(s)[None].repeat(b, 0)
+    pos[:, s // 2:] = -1
+    kv_pos = jnp.asarray(pos, jnp.int32)
+    q_pos = jnp.int32(s)
+
+    got = decode_attention(q, kc, ks, vc, vs, kv_pos, q_pos, block_s=bs)
+    want = ref.decode_attention_ref(q, kc, ks, vc, vs, kv_pos, q_pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_causal_bound():
+    from repro.kernels.ops import decode_attention
+
+    rng = np.random.default_rng(0)
+    b, kh, g, hd, s = 1, 1, 2, 32, 64
+    q = jnp.asarray(rng.normal(size=(b, kh, g, hd)), jnp.float32)
+    kc = jnp.asarray(rng.integers(-127, 128, (b, kh, s, hd)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, (b, kh, s, hd)), jnp.int8)
+    ks = vs = jnp.full((b, kh, s), 0.01, jnp.float32)
+    kv_pos = jnp.asarray(np.arange(s)[None], jnp.int32)
+    # attending at q_pos=10 must ignore slots with pos > 10: perturbing them
+    # cannot change the output
+    out1 = decode_attention(q, kc, ks, vc, vs, kv_pos, jnp.int32(10), block_s=32)
+    vc2 = vc.at[:, :, 20:].set(100)
+    out2 = decode_attention(q, kc, ks, vc2, vs, kv_pos, jnp.int32(10), block_s=32)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)

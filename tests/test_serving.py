@@ -1,0 +1,112 @@
+"""Serving tests: batched engine greedy decode, and the split-computing
+engine (OPSC + TS/TAB-Q payload + channel/early-exit) against the monolithic
+engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.channel import ChannelConfig
+from repro.core.opsc import OPSCConfig
+from repro.models.transformer import RuntimeOpts, init_params
+from repro.serving.engine import Engine
+from repro.serving.split_engine import SplitEngine
+
+OPTS = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False, moe_capacity_factor=0.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama2-7b").tiny()  # 2 layers, pattern len 1
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_greedy_deterministic(tiny_model):
+    cfg, params = tiny_model
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (3, 8))
+    r1 = eng.generate(prompts, max_new_tokens=6)
+    r2 = eng.generate(prompts, max_new_tokens=6)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r1.tokens.shape == (3, 14)
+    np.testing.assert_array_equal(r1.tokens[:, :8], prompts)
+
+
+def test_engine_temperature_sampling_varies(tiny_model):
+    cfg, params = tiny_model
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 8))
+    a = eng.generate(prompts, 8, temperature=1.5, seed=0).tokens
+    b = eng.generate(prompts, 8, temperature=1.5, seed=1).tokens
+    assert not np.array_equal(a, b)
+
+
+def test_split_engine_matches_monolithic_uncompressed(tiny_model):
+    """No compression + fp16-equivalent front → split must equal monolithic."""
+    cfg, params = tiny_model
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    opsc = OPSCConfig(split_layer=1, qw_front=16, i_kv=1)
+    split = SplitEngine(cfg, params, opsc, opts=OPTS, cache_len=64)
+    prompts = np.random.default_rng(2).integers(0, cfg.vocab_size, (2, 8))
+    ref = eng.generate(prompts, 5).tokens
+    got, stats = split.generate(prompts, 5, compress=False)
+    np.testing.assert_array_equal(got, ref)
+    assert stats.uplink_bits_eq3 > 0
+
+
+def test_split_engine_compressed_mostly_matches(tiny_model):
+    """TS+TAB-Q payload + int4 front weights: tokens should mostly agree with
+    the monolithic engine (paper's 'negligible accuracy loss')."""
+    cfg, params = tiny_model
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    opsc = OPSCConfig(split_layer=1, qw_front=8, qa_front=8, tau=2.0,
+                      delta=0.05, max_act_bits=8)
+    split = SplitEngine(cfg, params, opsc, opts=OPTS, cache_len=64)
+    prompts = np.random.default_rng(3).integers(0, cfg.vocab_size, (2, 8))
+    ref = eng.generate(prompts, 8).tokens
+    got, stats = split.generate(prompts, 8, compress=True)
+    agree = np.mean(got[:, 8:] == ref[:, 8:])
+    assert agree >= 0.75, f"agreement {agree}"
+    assert stats.uplink_bits_measured > 0
+
+
+def test_split_engine_ikv0_stateless_cloud(tiny_model):
+    """I_kv = 0: stateless cloud recompute must still produce the same greedy
+    tokens as the cached path when nothing is compressed."""
+    cfg, params = tiny_model
+    o1 = OPSCConfig(split_layer=1, qw_front=16, i_kv=1)
+    o0 = OPSCConfig(split_layer=1, qw_front=16, i_kv=0)
+    s1 = SplitEngine(cfg, params, o1, opts=OPTS, cache_len=64)
+    s0 = SplitEngine(cfg, params, o0, opts=OPTS, cache_len=64)
+    prompts = np.random.default_rng(4).integers(0, cfg.vocab_size, (1, 6))
+    t1, st1 = s1.generate(prompts, 5, compress=False)
+    t0, st0 = s0.generate(prompts, 5, compress=False)
+    np.testing.assert_array_equal(t0, t1)
+    # Eq. 3: hidden-only uplink accounting is far smaller than KV-cache uplink
+    assert st0.uplink_bits_eq3 < st1.uplink_bits_eq3
+
+
+def test_split_engine_early_exit_on_tight_deadline(tiny_model):
+    cfg, params = tiny_model
+    opsc = OPSCConfig(split_layer=1, qw_front=16)
+    split = SplitEngine(cfg, params, opsc, opts=OPTS, cache_len=64,
+                        deadline_s=1e-7, compute_per_layer_s=1e-3)
+    prompts = np.random.default_rng(5).integers(0, cfg.vocab_size, (1, 6))
+    got, stats = split.generate(prompts, 10, compress=True)
+    assert stats.early_exits >= 1
+    assert got.shape[1] < 16  # truncated generation
+
+
+def test_split_engine_compression_shrinks_uplink(tiny_model):
+    cfg, params = tiny_model
+    opsc = OPSCConfig(split_layer=1, qw_front=16, tau=5.0, max_act_bits=6)
+    split = SplitEngine(cfg, params, opsc, opts=OPTS, cache_len=64)
+    prompts = np.random.default_rng(6).integers(0, cfg.vocab_size, (1, 8))
+    _, raw = split.generate(prompts, 5, compress=False)
+    _, comp = split.generate(prompts, 5, compress=True)
+    assert comp.uplink_bits_measured < raw.uplink_bits_measured / 2

@@ -1,0 +1,70 @@
+"""Correctness of the pod-axis split pipeline: on a 2-pod mesh (subprocess,
+forced device count) the pipelined decode must produce the same greedy
+tokens as the monolithic decode_step, and int8 payloads must stay close."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json, sys
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.split_pipeline import init_pipeline_caches, pipeline_decode_sharded
+from repro.models.transformer import RuntimeOpts, decode_step, init_caches, init_params
+
+payload_bits = int(sys.argv[1])
+cfg = get_config("llama2-7b").tiny()  # 2 blocks → 1 per pod
+opts = RuntimeOpts(q_chunk=8, kv_chunk=64, remat=False, moe_capacity_factor=0.0)
+params = init_params(cfg, jax.random.PRNGKey(0))
+mesh = jax.make_mesh((2, 1, 1), ("pod", "data", "model"))
+
+b, n_micro, steps = 8, 2, 3
+rng = np.random.default_rng(0)
+tok0 = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+
+# ---- monolithic reference
+caches = init_caches(cfg, b, 64, opts)
+ref_tokens = []
+tok = tok0
+for pos in range(steps):
+    logits, caches = decode_step(params, cfg, tok, caches, jnp.int32(pos), opts)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    ref_tokens.append(np.asarray(tok))
+
+# ---- pipelined
+other = {k: v for k, v in params.items() if k != "blocks"}
+bs = b // n_micro
+with mesh:
+    step = jax.jit(pipeline_decode_sharded(cfg, opts, mesh, n_micro, payload_bits))
+    pcaches = init_pipeline_caches(cfg, bs, n_micro, 64, opts)
+    tok = tok0
+    got_tokens = []
+    for pos in range(steps):
+        tok, pcaches = step(params["blocks"], other, tok, pcaches, jnp.int32(pos))
+        tok = tok.astype(jnp.int32)
+        got_tokens.append(np.asarray(tok))
+
+match = float(np.mean([np.mean(a == b_) for a, b_ in zip(ref_tokens, got_tokens)]))
+print(json.dumps({"match": match}))
+"""
+
+
+@pytest.mark.parametrize("bits,min_match", [(16, 1.0), (8, 0.8), (4, 0.5)])
+def test_pipeline_matches_monolithic(bits, min_match):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT, str(bits)],
+                         capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["match"] >= min_match, res

@@ -1,0 +1,112 @@
+"""Training substrate tests: optimizer math, data pipeline, loss decreases on
+real (synthetic-corpus) training, checkpoint roundtrip."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import (ZipfMarkov, induction_batch, induction_loader,
+                                 lm_loader, make_batch)
+from repro.models.transformer import RuntimeOpts, init_params
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      global_norm, lr_schedule)
+from repro.training.train_loop import (TrainConfig, cross_entropy,
+                                       init_train_state, make_train_step, train)
+
+OPTS = RuntimeOpts(q_chunk=32, kv_chunk=32, remat=False, moe_capacity_factor=0.0)
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(cfg, grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100, 200)]
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert lrs[4] == pytest.approx(1e-4, rel=1e-3)
+    assert lrs[5] == pytest.approx(1e-4, rel=1e-3)  # floor
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_config("llama2-7b").tiny()
+    params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = make_batch(rng.integers(0, cfg.vocab_size, (8, 16)))
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+
+    tc1 = TrainConfig(AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10), accum_steps=1)
+    tc4 = TrainConfig(AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10), accum_steps=4)
+    p1, _, m1 = jax.jit(make_train_step(cfg, tc1, OPTS))(params, opt_state, batch)
+    p4, _, m4 = jax.jit(make_train_step(cfg, tc4, OPTS))(params, opt_state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4)
+    assert max(jax.tree_util.tree_leaves(diffs)) < 5e-3
+
+
+def test_zipf_markov_learnable():
+    """A tiny model trained on the Markov corpus must beat the unigram bound
+    and approach the chain's entropy rate."""
+    corpus = ZipfMarkov(vocab_size=64, branching=4, seed=0)
+    cfg = get_config("llama2-7b").tiny()
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, vocab_size=64)
+    loader = lm_loader(corpus, batch=16, seq=32, num_batches=120)
+    tc = TrainConfig(AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=120))
+    params, _, hist = train(cfg, loader, tc, OPTS, log_every=1000)
+    first, last = hist[0]["ce"], hist[-1]["ce"]
+    assert last < first * 0.7  # clear learning signal
+    h_chain = corpus.entropy_rate_bits() * np.log(2.0)
+    assert last < np.log(64) * 0.8  # well below uniform
+    assert last > h_chain * 0.5  # sanity: not below the entropy bound /2
+
+
+def test_induction_task_shapes_and_mask():
+    rng = np.random.default_rng(0)
+    tokens, mask = induction_batch(rng, 4, 21, 64)
+    assert tokens.shape == (4, 21)
+    # copied region repeats the prefix
+    np.testing.assert_array_equal(tokens[:, :10], tokens[:, 11:21])
+    b = make_batch(tokens, mask)
+    assert b["labels"].shape == (4, 21)
+    assert b["loss_mask"].sum() > 0
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_config("gemma2-2b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, params, step=42)
+        template = jax.tree_util.tree_map(
+            lambda a: jnp.zeros(a.shape, a.dtype), params)
+        restored, step = restore_checkpoint(d, template)
+        assert step == 42
+        same = jax.tree_util.tree_map(
+            lambda a, b: bool(jnp.all(a == b)), params, restored)
+        assert all(jax.tree_util.tree_leaves(same))
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((2, 4, 8))
+    labels = jnp.zeros((2, 4), jnp.int32)
+    full = cross_entropy(logits, labels, jnp.ones((2, 4)))
+    assert float(full) == pytest.approx(np.log(8), rel=1e-5)
+    half = cross_entropy(logits, labels,
+                         jnp.asarray([[1, 1, 0, 0], [0, 0, 0, 0]], jnp.float32))
+    assert float(half) == pytest.approx(np.log(8), rel=1e-5)
