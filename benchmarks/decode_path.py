@@ -1,0 +1,117 @@
+"""decode_path benchmark: fp-cache vs int8-cache fused decode (§Roofline).
+
+Compares `Engine`-style decode over (a) fp32 cache, (b) fp16 cache and
+(c) the int8 quantized cache streamed by the Pallas decode-attention kernel,
+at the same (batch, cache_len) config. Reports per-step latency (CPU with
+kernels in interpret mode — call-path validation, NOT TPU performance) and
+the cache bytes each path carries/streams, and writes a JSON record under
+experiments/decode_path/ for the BENCH_* trajectory.
+
+Byte accounting (per decode step, attention KV only):
+  * resident_bytes — the KV cache arrays held in HBM (Eq. 2's memory term);
+  * stream_bytes   — what the decode attention actually moves: the fp paths
+    upcast the cache to an f32 compute copy (4 B/elem — the XLA chunked path
+    materializes it; on CPU this is measured behavior, see
+    kernels/decode_attention.py), while the kernel path streams the int8
+    codes + per-(token, head) scales with in-register dequant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "decode_path")
+
+BATCH = 4
+PROMPT = 16
+CACHE_LEN = 192  # < BLOCK_S: a single short kernel block, no padding
+
+
+def _kv_bytes(caches) -> int:
+    """Bytes of the attention-cache k/v/scale leaves (pos excluded)."""
+    total = 0
+    for c in caches:
+        if not hasattr(c, "k"):
+            continue
+        for leaf in (c.k, c.v, c.k_scale, c.v_scale):
+            if leaf is not None:
+                total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def _stream_bytes(caches) -> int:
+    """Bytes the decode attention moves per step: f32 compute copies of fp
+    caches vs. the int8 codes + f32 scales the kernel streams directly."""
+    total = 0
+    for c in caches:
+        if not hasattr(c, "k"):
+            continue
+        if c.k_scale is None:  # fp path: k/v upcast to f32 for the contraction
+            total += 2 * c.k.size * 4
+        else:  # kernel path: int8 codes + per-(token, head) f32 scales
+            total += 2 * (c.k.size * 1 + c.k_scale.size * 4)
+    return total
+
+
+def bench_decode_path():
+    from repro.configs import get_config
+    from repro.models.transformer import (RuntimeOpts, decode_step,
+                                          init_params, prefill)
+
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (BATCH, PROMPT)),
+                         jnp.int32)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (BATCH, 1)), jnp.int32)
+
+    base = dict(q_chunk=16, kv_chunk=CACHE_LEN, remat=False,
+                moe_capacity_factor=0.0)
+    variants = {
+        "fp32": RuntimeOpts(cache_dtype="float32", **base),
+        "fp16": RuntimeOpts(cache_dtype="float16", **base),
+        "int8": RuntimeOpts(quantized_kv=True, **base),
+    }
+
+    rows, rec = [], {"config": {"arch": cfg.name, "batch": BATCH,
+                                "prompt": PROMPT, "cache_len": CACHE_LEN}}
+    for name, opts in variants.items():
+        _, caches = prefill(params, cfg, tokens, None, CACHE_LEN, opts)
+        step = jax.jit(lambda p, t, c, pos, o=opts: decode_step(
+            p, cfg, t, c, pos, o))
+        jax.block_until_ready(step(params, nxt, caches, jnp.int32(PROMPT)))
+        t0 = time.time()
+        n = 5
+        for i in range(n):
+            logits, caches = step(params, nxt, caches, jnp.int32(PROMPT + i))
+        jax.block_until_ready(logits)
+        us = (time.time() - t0) / n * 1e6
+        resident = _kv_bytes(caches)
+        stream = _stream_bytes(caches)
+        rec[name] = {"step_us": round(us, 1), "resident_bytes": resident,
+                     "stream_bytes": stream}
+        rows.append((f"decode_path/{name}_step", us,
+                     f"resident={resident}B stream={stream}B"))
+
+    rec["cache_bytes_reduction_vs_fp32"] = round(
+        rec["fp32"]["resident_bytes"] / rec["int8"]["resident_bytes"], 2)
+    rec["cache_bytes_reduction_vs_fp16"] = round(
+        rec["fp16"]["resident_bytes"] / rec["int8"]["resident_bytes"], 2)
+    rec["stream_bytes_reduction_vs_fp16"] = round(
+        rec["fp16"]["stream_bytes"] / rec["int8"]["stream_bytes"], 2)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "decode_path.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    rows.append(("decode_path/stream_reduction_vs_fp16", 0.0,
+                 rec["stream_bytes_reduction_vs_fp16"]))
+    rows.append(("decode_path/resident_reduction_vs_fp32", 0.0,
+                 rec["cache_bytes_reduction_vs_fp32"]))
+    return rows

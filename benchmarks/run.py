@@ -16,9 +16,11 @@ import time
 
 def _registry():
     from benchmarks import paper_benchmarks as pb
+    from benchmarks.decode_path import bench_decode_path
     from benchmarks.roofline_report import bench_roofline
 
     return {
+        "decode_path": bench_decode_path,
         "fig5": pb.bench_fig5_server_scaling,
         "fig6": pb.bench_fig6_payload_size,
         "fig7": pb.bench_fig7_ts_ratio,

@@ -72,7 +72,9 @@ def encode_decode_ste(t: jax.Array, **kw) -> jax.Array:
 def entropy_bound_bits(q: TabQResult, n_bins: int = 256) -> jax.Array:
     """Shannon bound for an rANS pass over the magnitude codes (analytical
     stand-in for the paper's DietGPU stage)."""
-    codes = jnp.clip(q.codes.reshape(-1), 0, n_bins - 1).astype(jnp.int32)
+    # codes ride an int8 carrier (rebased to [0, Q_max]); widen before the
+    # clip so the n_bins-1 bound can't wrap the narrow dtype
+    codes = jnp.clip(q.codes.reshape(-1).astype(jnp.int32), 0, n_bins - 1)
     hist = jnp.zeros(n_bins).at[codes].add(1.0)
     p = hist / jnp.maximum(jnp.sum(hist), 1.0)
     h = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-12)), 0.0))

@@ -27,14 +27,25 @@ from repro.core.quant import aiq, aiq_dequant
 MIN_BITS = 2
 
 
+def _rebase_int8(codes: jax.Array, zero: jax.Array, max_bits: int):
+    """Shift per-token codes down to start at 0 so they span ≤ 2^(max_bits-1)
+    values — an int8 carrier for every max_bits ≤ 8 (int32 otherwise). The
+    zero point absorbs the shift: dequant (codes - zero)·scale is unchanged."""
+    c_lo = jnp.min(codes, axis=-1, keepdims=True)
+    carrier = jnp.int8 if max_bits <= 8 else jnp.int32
+    return (codes - c_lo).astype(carrier), zero - c_lo
+
+
 @dataclasses.dataclass
 class TabQResult:
     """Per-token adaptively quantized tensor (a pytree).
 
-    codes : (tokens, D) magnitude codes (float-valued integers)
+    codes : (tokens, D) magnitude codes, rebased per token to [0, Q_max] so
+            an int8 carrier fits whenever max_bits ≤ 8 (the wire/payload
+            representation — matches kernels.tabq_quantize)
     sign  : (tokens, D) int8 in {-1, 0, +1} — the paper's reserved sign bit
     scale : (tokens, 1) per-token scale
-    zero  : (tokens, 1) per-token zero point
+    zero  : (tokens, 1) per-token zero point (absorbs the rebasing shift)
     bits  : (tokens,)  per-token chosen bit-width (includes the sign bit)
     """
 
@@ -77,6 +88,7 @@ def tabq(t: jax.Array, max_bits: int = 8, delta: float = 0.2) -> TabQResult:
     n = t.shape[-1]
     levels = list(range(q_ref - 1, MIN_BITS - 1, -1))  # Q̄-1 … MIN_BITS
     if not levels:
+        codes0, z0 = _rebase_int8(codes0, z0, max_bits)
         return TabQResult(codes0, sign, s0, z0, jnp.full(t.shape[:-1], max_bits, jnp.int32))
 
     def level_result(q):
@@ -119,6 +131,7 @@ def tabq(t: jax.Array, max_bits: int = 8, delta: float = 0.2) -> TabQResult:
     zero = gather(all_z[..., 0], z0[..., 0])[..., None]
     bits_mag = jnp.where(take_init, q_ref, jnp.asarray(levels, jnp.int32)[idx])
     bits = bits_mag + 1  # + sign bit
+    codes, zero = _rebase_int8(codes, zero, max_bits)
     return TabQResult(codes, sign, scale, zero, bits.astype(jnp.int32))
 
 
@@ -128,4 +141,5 @@ def tabq_fixed(t: jax.Array, bits: int) -> TabQResult:
     hard payload budget dictates the level, e.g. Algorithm 2 fallbacks)."""
     sign = jnp.sign(t).astype(jnp.int8)
     codes, s, z = aiq(jnp.abs(t), bits - 1, axis=-1)
+    codes, z = _rebase_int8(codes, z, bits)
     return TabQResult(codes, sign, s, z, jnp.full(t.shape[:-1], bits, jnp.int32))

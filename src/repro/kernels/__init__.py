@@ -1,3 +1,20 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's quantization hot spots — WIRED into
+the serving path, not a side gallery:
+
+  decode_attention — int8-KV decode attention. The §Roofline irreducible
+      term: streams the kv-head-major quantized cache (codes (B, K, S, hd)
+      int8 + per-(token, head) scales) through VMEM once, dequantizing
+      in-register with online softmax. ``models.layers`` routes every
+      decode-time attention over a quantized cache here (see
+      ``quantized_decode_attention``); ``RuntimeOpts.quantized_kv=True``
+      makes both serving engines take this path inside their fused loops.
+  tabq_kernel — per-token TAB-Q magnitude quantization (Eq. 5-6), int8
+      code carrier (codes rebased per token to [0, Q_max]).
+  dequant_matmul — int8-weight × fp-activation matmul with per-channel
+      dequant fused into the epilogue (OPSC front segments).
+  ts_mask — threshold splitting (Eq. 4) for the stage-boundary payload.
+
+``ops.py`` exposes jit'd wrappers that default to ``interpret=True`` off-TPU
+(CPU correctness / parity testing); ``ref.py`` holds the pure-jnp oracles
+the tests allclose against.
+"""

@@ -30,6 +30,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+BLOCK_S = 512  # default sequence-block size of the grid's minor axis
+
+
+def padded_cache_len(s: int, block_s: int = BLOCK_S) -> int:
+    """Round a cache length up to a whole number of kernel blocks. Callers
+    that allocate caches at this size (pad slots carry ``kv_pos = -1``) keep
+    the per-step path copy-free; other lengths still work via the pad-on-call
+    fallback below."""
+    if s <= block_s:
+        return s  # a single (possibly short) block — no padding needed
+    return -(-s // block_s) * block_s
 
 
 def _kernel(ns: int, scale: float, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
@@ -66,12 +77,23 @@ def _kernel(ns: int, scale: float, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
 
 
 def decode_attention(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos,
-                     block_s: int = 512, interpret: bool = False):
-    """See module docstring. Returns (B, K, G, hd) f32."""
+                     block_s: int = BLOCK_S, interpret: bool = False):
+    """See module docstring. Returns (B, K, G, hd) f32.
+
+    ``cache_len`` need not divide ``block_s``: the trailing block is padded
+    and the pad slots carry ``kv_pos = -1``, which the in-kernel validity
+    mask already treats as empty."""
     b, kh, g, hd = q.shape
     s = k_codes.shape[2]
     bs = min(block_s, s)
-    assert s % bs == 0, (s, bs)
+    pad = (-s) % bs
+    if pad:
+        k_codes = jnp.pad(k_codes, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_codes = jnp.pad(v_codes, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, 0), (0, pad)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, 0), (0, pad)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        s += pad
     ns = s // bs
     scale = 1.0 / (hd ** 0.5)
     kern = functools.partial(_kernel, ns, scale)

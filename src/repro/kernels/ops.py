@@ -48,8 +48,11 @@ def ts_mask(x, tau: float, block_t: int = 8, interpret: bool | None = None):
 
 @partial(jax.jit, static_argnames=("block_s", "interpret"))
 def decode_attention(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos,
-                     block_s: int = 512, interpret: bool | None = None):
+                     block_s: int | None = None, interpret: bool | None = None):
+    from repro.kernels.decode_attention import BLOCK_S
     from repro.kernels.decode_attention import decode_attention as _da
+
+    block_s = BLOCK_S if block_s is None else block_s
 
     interpret = _default_interpret() if interpret is None else interpret
     return _da(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos,

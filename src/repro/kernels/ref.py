@@ -9,9 +9,11 @@ import jax.numpy as jnp
 def tabq_quantize_ref(x: jax.Array, bits: int):
     """Per-token asymmetric magnitude quantization (TAB-Q inner op, Eq. 5-6).
 
-    x (T, D) → (codes int8 = |q|·sign carrier with separate sign, scale (T,1),
+    x (T, D) → (codes (T, D) int8 rebased to [0, 2^(bits-1)-1], scale (T,1),
     zero (T,1), sign (T, D) int8). Matches repro.core.quant.aiq on |x| with
-    per-token reduction."""
+    per-token reduction, then shifts codes/zero by the per-token code floor
+    so dequant (codes - zero)·scale·sign is unchanged."""
+    assert bits <= 8, "int8 code carrier requires bits <= 8"  # match kernel
     sign = jnp.sign(x).astype(jnp.int8)
     mag = jnp.abs(x.astype(jnp.float32))
     qmax = float(2 ** (bits - 1) - 1)
@@ -22,7 +24,7 @@ def tabq_quantize_ref(x: jax.Array, bits: int):
     codes = jnp.round(mag / s + z)
     c_lo = jnp.round(t_min / s + z)
     codes = jnp.clip(codes, c_lo, c_lo + qmax)
-    return codes.astype(jnp.int32), s, z, sign
+    return (codes - c_lo).astype(jnp.int8), s, z - c_lo, sign
 
 
 def tabq_dequantize_ref(codes, s, z, sign):

@@ -35,16 +35,23 @@ def _tabq_kernel(bits: int, x_ref, codes_ref, scale_ref, zero_ref, sign_ref):
     codes = jnp.round(mag / s + z)
     c_lo = jnp.round(t_min / s + z)
     codes = jnp.clip(codes, c_lo, c_lo + qmax)
-    codes_ref[...] = codes.astype(jnp.int32)
+    # rebase per token so codes span [0, qmax] ≤ 127 — an int8 carrier for
+    # every bits ≤ 8; the zero point absorbs the shift, so the dequant form
+    # (codes - zero)·scale·sign is unchanged
+    codes_ref[...] = (codes - c_lo).astype(jnp.int8)
     scale_ref[...] = s
-    zero_ref[...] = z
+    zero_ref[...] = z - c_lo
     sign_ref[...] = sign.astype(jnp.int8)
 
 
 def tabq_quantize(x: jax.Array, bits: int = 8, block_t: int = 8,
                   interpret: bool = False):
-    """x (T, D) → (codes (T, D) i32, scale (T,1) f32, zero (T,1) f32,
-    sign (T, D) i8). T must divide by block_t; D should be lane-aligned."""
+    """x (T, D) → (codes (T, D) i8, scale (T,1) f32, zero (T,1) f32,
+    sign (T, D) i8). Codes are rebased per token to [0, 2^(bits-1)-1] so an
+    int8 carrier always fits for bits ≤ 8 (the int32 carrier quadrupled the
+    payload/cache bandwidth this kernel exists to save). T must divide by
+    block_t; D should be lane-aligned."""
+    assert bits <= 8, "int8 code carrier requires bits <= 8"
     t, d = x.shape
     assert t % block_t == 0, (t, block_t)
     grid = (t // block_t,)
@@ -60,7 +67,7 @@ def tabq_quantize(x: jax.Array, bits: int = 8, block_t: int = 8,
             pl.BlockSpec((block_t, d), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((t, d), jnp.int32),
+            jax.ShapeDtypeStruct((t, d), jnp.int8),
             jax.ShapeDtypeStruct((t, 1), jnp.float32),
             jax.ShapeDtypeStruct((t, 1), jnp.float32),
             jax.ShapeDtypeStruct((t, d), jnp.int8),

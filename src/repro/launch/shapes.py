@@ -73,7 +73,10 @@ def _patch_struct(cfg: ArchConfig, b: int, mesh, b_axes, lead=()):
 
 def default_opts(cfg: ArchConfig, shape: ShapeSpec, **overrides) -> RuntimeOpts:
     base = dict(q_chunk=1024, kv_chunk=1024, remat=True,
-                quantized_kv=shape.kind == "decode",  # paper's Q^a on the cache
+                # paper's Q^a on the cache: kv-head-major int8 codes +
+                # per-(token, head) f32 scales (the Pallas decode-attention
+                # layout — init_caches/cache_specs carry the dtypes/shapes)
+                quantized_kv=shape.kind == "decode",
                 moe_capacity_factor=1.25)
     if shape.kind == "decode":
         # single KV block: no scan over a sharded cache dim (DESIGN.md §5);

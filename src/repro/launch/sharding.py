@@ -120,34 +120,46 @@ def cache_specs(cfg: ArchConfig, mesh, batch: int, seq: int, quantized: bool = F
         # axes when batch=1). Decode attention then contracts over hd and
         # psums only the tiny (b, h, 1, hd) output; sharding kv-heads or hd
         # instead forces score-side collectives over the whole cache.
+        # Returns (kv tensor spec, scale spec, seq axis); the quantized cache
+        # is kv-head-major (nb, B, K, S, hd) + scales (nb, B, K, S), the fp
+        # cache token-major (nb, B, S, K, hd).
         s_axes = []
         if not batch_ok:
             s_axes.extend(dax)  # long_500k batch=1
         s_axes.append("model")
+        s_ax = None
         if size % len_prod(mesh, tuple(s_axes)) == 0:
             s_ax = tuple(s_axes) if len(s_axes) > 1 else s_axes[0]
-            kv = P(None, b_ax, s_ax, None, None)
-            return kv, kv
-        if not batch_ok and size % len_prod(mesh, dax) == 0:
-            kv = P(None, b_ax, dax, None, None)
-            return kv, kv
+        elif not batch_ok and size % len_prod(mesh, dax) == 0:
+            s_ax = dax
+        if quantized:
+            if s_ax is not None:
+                return (P(None, b_ax, None, s_ax, None),
+                        P(None, b_ax, None, s_ax), s_ax)
+            if kv_heads % msize == 0:
+                return (P(None, b_ax, "model", None, None),
+                        P(None, b_ax, "model", None), None)
+            return (P(None, b_ax, None, None, None),
+                    P(None, b_ax, None, None), None)
+        if s_ax is not None:
+            return P(None, b_ax, s_ax, None, None), None, s_ax
         if kv_heads % msize == 0:
-            kv = P(None, b_ax, None, "model", None)
-            return kv, kv
-        return (P(None, b_ax, None, None, None),) * 2
+            return P(None, b_ax, None, "model", None), None, None
+        return P(None, b_ax, None, None, None), None, None
 
     specs = []
     for ls in cfg.pattern:
         m = ls.mixer
         if m.kind == "attn":
             size = min(seq, m.sliding_window) if m.sliding_window else seq
-            kv, sc = kv_spec(m.num_kv_heads, m.head_dim, size)
-            pos_sax = kv[2]
+            if quantized:  # init_caches block-aligns the quantized slot axis
+                from repro.kernels.decode_attention import padded_cache_len
+
+                size = padded_cache_len(size)
+            kv, sc, pos_sax = kv_spec(m.num_kv_heads, m.head_dim, size)
             from repro.models.layers import KVCache
 
-            specs.append(KVCache(kv, kv, sc if quantized else None,
-                                 sc if quantized else None,
-                                 P(None, b_ax, pos_sax)))
+            specs.append(KVCache(kv, kv, sc, sc, P(None, b_ax, pos_sax)))
         else:
             conv_ch = m.d_inner + 2 * m.d_state
             conv = P(None, b_ax, None, "model" if conv_ch % msize == 0 else None)

@@ -1,10 +1,16 @@
 """Model building blocks: norms, rotary embeddings (RoPE / M-RoPE /
 sinusoidal), GQA attention with flash-style double-chunked online softmax
-(pure JAX — the TPU Pallas kernels in ``repro.kernels`` cover the
-quantization hot spots; attention stays XLA-fusable and differentiable),
-SwiGLU/GELU MLPs, and KV caches (bf16 or int8-quantized per-token).
+(pure JAX for training/prefill — attention stays XLA-fusable and
+differentiable), SwiGLU/GELU MLPs, and KV caches.
 
-Shapes: activations (B, S, D); q/k/v (B, S, H|K, hd); caches (B, S, K, hd).
+Caches come in two layouts:
+  * fp (bf16/f32): token-major (B, S, K, hd) — read by chunked_attention;
+  * int8-quantized: kv-head-major (B, K, S, hd) codes + per-(token, head)
+    scales (B, K, S) — the exact layout streamed by the Pallas
+    ``kernels.decode_attention`` kernel, which decode-time attention routes
+    to (see :func:`quantized_decode_attention`).
+
+Shapes: activations (B, S, D); q/k/v (B, S, H|K, hd).
 """
 
 from __future__ import annotations
@@ -84,9 +90,11 @@ def sinusoidal_embedding(positions: jax.Array, dim: int) -> jax.Array:
 
 @dataclasses.dataclass
 class KVCache:
-    """Per-layer-stack KV cache (a pytree). ``k``/``v`` are either bf16 tensors
-    (B, S, K, hd) or int8 code tensors with per-(token, head) scales —
-    realizing the paper's Q^a activation-bit control on the cache (Eq. 2).
+    """Per-layer-stack KV cache (a pytree). ``k``/``v`` are either fp tensors
+    in token-major (B, S, K, hd) layout, or int8 code tensors in kv-head-major
+    (B, K, S, hd) layout with per-(token, head) scales (B, K, S) — realizing
+    the paper's Q^a activation-bit control on the cache (Eq. 2) in the exact
+    layout the Pallas decode-attention kernel streams.
 
     ``pos`` holds the absolute position stored in each slot (ring buffers for
     sliding-window layers overwrite slots; attention masks by position, so
@@ -94,7 +102,7 @@ class KVCache:
 
     k: jax.Array
     v: jax.Array
-    k_scale: jax.Array | None  # (B, S, K, 1) when quantized
+    k_scale: jax.Array | None  # (B, K, S) when quantized
     v_scale: jax.Array | None
     pos: jax.Array  # (B, S) int32; -1 = empty
 
@@ -112,14 +120,15 @@ jax.tree_util.register_pytree_node(
 
 def init_cache(batch: int, size: int, kv_heads: int, head_dim: int,
                dtype=jnp.bfloat16, quantized: bool = False) -> KVCache:
-    shape = (batch, size, kv_heads, head_dim)
-    if quantized:
+    if quantized:  # kv-head-major kernel layout
+        shape = (batch, kv_heads, size, head_dim)
         return KVCache(
             k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
-            k_scale=jnp.zeros((batch, size, kv_heads, 1), jnp.float32),
-            v_scale=jnp.zeros((batch, size, kv_heads, 1), jnp.float32),
+            k_scale=jnp.zeros((batch, kv_heads, size), jnp.float32),
+            v_scale=jnp.zeros((batch, kv_heads, size), jnp.float32),
             pos=jnp.full((batch, size), -1, jnp.int32),
         )
+    shape = (batch, size, kv_heads, head_dim)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), None, None,
                    jnp.full((batch, size), -1, jnp.int32))
 
@@ -135,8 +144,16 @@ def _quantize_kv(x: jax.Array):
 def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
                  pos: jax.Array, window: int | None = None) -> KVCache:
     """Write ``k_new``/``v_new`` (B, S_new, K, hd) at absolute position ``pos``
-    (scalar int32). Ring-buffered when ``window`` is set."""
-    size = cache.k.shape[1]
+    (scalar int32). Ring-buffered when ``window`` is set. Quantized caches are
+    written in the kernel's kv-head-major layout, the slot axis being 2
+    instead of 1."""
+    seq_axis = 2 if cache.quantized else 1
+    size = cache.k.shape[seq_axis]
+    if window is not None:
+        # quantized caches may be block-padded past the window; the ring must
+        # wrap within it so stale positions can't outlive the window (pad
+        # slots are never written and keep pos = -1 → masked)
+        size = min(window, size)
     s_new = k_new.shape[1]
     if window is not None and s_new >= size:
         # writing ≥ a full ring: only the last ``size`` tokens survive; slice
@@ -148,16 +165,17 @@ def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
     if window is not None:
         slots = (pos + jnp.arange(s_new)) % size  # ring buffer
 
-        def write(buf, val):
-            return buf.at[:, slots].set(val.astype(buf.dtype))
+        def write(buf, val, axis=1):
+            idx = (slice(None),) * axis + (slots,)
+            return buf.at[idx].set(val.astype(buf.dtype))
 
         def write_pos(buf):
             return buf.at[:, slots].set(pos + jnp.arange(s_new))
 
     else:
 
-        def write(buf, val):  # contiguous → dynamic_update_slice (SPMD-friendly)
-            idx = (0, pos) + (0,) * (buf.ndim - 2)
+        def write(buf, val, axis=1):  # contiguous → dynamic_update_slice
+            idx = (0,) * axis + (pos,) + (0,) * (buf.ndim - axis - 1)
             return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
 
         def write_pos(buf):
@@ -166,10 +184,13 @@ def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
             return jax.lax.dynamic_update_slice(buf, upd, (0, pos))
 
     if cache.quantized:
-        kc, ks = _quantize_kv(k_new)
+        kc, ks = _quantize_kv(k_new)  # (B, S_new, K, hd), (B, S_new, K, 1)
         vc, vs = _quantize_kv(v_new)
-        return KVCache(write(cache.k, kc), write(cache.v, vc),
-                       write(cache.k_scale, ks), write(cache.v_scale, vs),
+        to_hm = lambda c: jnp.swapaxes(c, 1, 2)  # token- → kv-head-major
+        return KVCache(write(cache.k, to_hm(kc), seq_axis),
+                       write(cache.v, to_hm(vc), seq_axis),
+                       write(cache.k_scale, to_hm(ks[..., 0]), seq_axis),
+                       write(cache.v_scale, to_hm(vs[..., 0]), seq_axis),
                        write_pos(cache.pos))
     return KVCache(write(cache.k, k_new), write(cache.v, v_new), None, None,
                    write_pos(cache.pos))
@@ -201,13 +222,12 @@ def chunked_attention(
     softcap: float | None = None,
     q_chunk: int = 1024,
     kv_chunk: int = 1024,
-    k_scale: jax.Array | None = None,  # (B, Skv, K, 1) int8-cache dequant
-    v_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Memory-bounded attention: outer scan over query chunks, inner scan over
     KV chunks with online softmax. Never materializes an (Sq, Skv) score
     tensor — required for the 32k/500k shapes. Supports GQA (grouped heads),
-    sliding windows, logit soft-capping and int8-quantized K/V."""
+    sliding windows and logit soft-capping. (Quantized-cache decode routes to
+    :func:`quantized_decode_attention` instead.)"""
     b, sq, h, hd = q.shape
     _, skv, kh, _ = k.shape
     g = h // kh
@@ -227,9 +247,6 @@ def chunked_attention(
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)), constant_values=-1)
-        if k_scale is not None:
-            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
 
     if nq == 1 and nk == 1:
         # single-block fast path (decode): no scan, no reshape/dynamic-slice
@@ -238,9 +255,6 @@ def chunked_attention(
         q1 = qf.reshape(b, qc, kh, g, hd)
         kf = k.astype(jnp.float32)
         vf = v.astype(jnp.float32)
-        if k_scale is not None:
-            kf = kf * k_scale
-            vf = vf * v_scale
         s = jnp.einsum("bqkgd,bckd->bkgqc", q1, kf,
                        preferred_element_type=jnp.float32)
         s = _soft_cap(s, softcap)
@@ -263,8 +277,6 @@ def chunked_attention(
     kr = k.reshape(b, nk, kc, kh, hd)
     vr = v.reshape(b, nk, kc, kh, hd)
     kp = kv_pos.reshape(b, nk, kc)
-    ksr = k_scale.reshape(b, nk, kc, kh, 1) if k_scale is not None else None
-    vsr = v_scale.reshape(b, nk, kc, kh, 1) if v_scale is not None else None
 
     def q_step(_, qi):
         q_blk = qf[:, qi]  # (B, qc, K, G, hd)
@@ -274,9 +286,6 @@ def chunked_attention(
             m, l, acc = carry
             k_blk = kr[:, ki]
             v_blk = vr[:, ki]
-            if ksr is not None:
-                k_blk = k_blk.astype(jnp.float32) * ksr[:, ki]
-                v_blk = v_blk.astype(jnp.float32) * vsr[:, ki]
             kp_blk = kp[:, ki]  # (B, kc)
             s = jnp.einsum("bqkgd,bckd->bkgqc", q_blk,
                            k_blk.astype(jnp.float32),
@@ -312,6 +321,41 @@ def chunked_attention(
         out = jnp.moveaxis(out, 0, 1)  # (B, nq, qc, K, G, hd)
     out = out.reshape(b, nq * qc, h, hd)[:, :sq]
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-cache decode attention (Pallas fast path + fallback)
+# ---------------------------------------------------------------------------
+
+
+def quantized_decode_attention(q, cache: KVCache, spec, q_positions, pos, *,
+                               q_chunk=1024, kv_chunk=1024):
+    """Decode-time attention over the kv-head-major int8 cache.
+
+    Kernel-eligible layers — single-token query, no logit softcap — stream
+    the int8 codes straight through the Pallas ``decode_attention`` kernel
+    (``interpret=True`` off-TPU gives bit-identical CPU parity), never
+    materializing a dequantized fp copy of the cache. Sliding-window layers
+    are eligible too: their ring buffer only ever holds in-window positions,
+    so the kernel's position mask is sufficient. Softcapped layers (gemma2)
+    dequantize to the token-major layout and take chunked_attention.
+    """
+    b, s, h, hd = q.shape
+    kh = cache.k.shape[1]
+    if s == 1 and spec.attn_softcap is None:
+        from repro.kernels.ops import decode_attention
+
+        qh = q[:, 0].reshape(b, kh, h // kh, hd)
+        out = decode_attention(qh, cache.k, cache.k_scale, cache.v,
+                               cache.v_scale, cache.pos,
+                               jnp.asarray(pos, jnp.int32))
+        return out.reshape(b, 1, h, hd).astype(q.dtype)
+    k = jnp.swapaxes(cache.k.astype(jnp.float32) * cache.k_scale[..., None], 1, 2)
+    v = jnp.swapaxes(cache.v.astype(jnp.float32) * cache.v_scale[..., None], 1, 2)
+    return chunked_attention(q, k, v, q_positions, cache.pos, causal=True,
+                             window=spec.sliding_window,
+                             softcap=spec.attn_softcap,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -364,16 +408,20 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
     if cache is not None:
         new_cache = cache_update(cache, k, v, pos, spec.sliding_window)
     if cache is not None and decode:
-        kv_k, kv_v = new_cache.k, new_cache.v
-        kv_pos = new_cache.pos
-        ks, vs = new_cache.k_scale, new_cache.v_scale
+        if new_cache.quantized:
+            out = quantized_decode_attention(
+                q, new_cache, spec, q_positions, pos,
+                q_chunk=q_chunk, kv_chunk=kv_chunk)
+        else:
+            out = chunked_attention(
+                q, new_cache.k, new_cache.v, q_positions, new_cache.pos,
+                causal=True, window=spec.sliding_window,
+                softcap=spec.attn_softcap, q_chunk=q_chunk, kv_chunk=kv_chunk)
     else:
-        kv_k, kv_v, kv_pos, ks, vs = k, v, q_positions, None, None
-
-    out = chunked_attention(
-        q, kv_k, kv_v, q_positions, kv_pos,
-        causal=True, window=spec.sliding_window, softcap=spec.attn_softcap,
-        q_chunk=q_chunk, kv_chunk=kv_chunk, k_scale=ks, v_scale=vs)
+        out = chunked_attention(
+            q, k, v, q_positions, q_positions,
+            causal=True, window=spec.sliding_window, softcap=spec.attn_softcap,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
     out = out.reshape(b, s, h * hd) @ params["wo"]
     return out, new_cache
 

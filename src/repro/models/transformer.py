@@ -300,13 +300,23 @@ def init_caches(cfg: ArchConfig, batch: int, cache_len: int, opts: RuntimeOpts):
         m = ls.mixer
         if isinstance(m, AttnSpec):
             size = min(cache_len, m.sliding_window) if m.sliding_window else cache_len
-            shape = (nb, batch, size, m.num_kv_heads, m.head_dim)
             if opts.quantized_kv:
-                c = L.KVCache(jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
-                              jnp.zeros(shape[:-1] + (1,), jnp.float32),
-                              jnp.zeros(shape[:-1] + (1,), jnp.float32),
-                              jnp.full((nb, batch, size), -1, jnp.int32))
+                # kv-head-major kernel layout: int8 codes + per-(token, head)
+                # scales, streamed as-is by kernels.decode_attention; the
+                # slot axis is block-aligned so the kernel never re-pads the
+                # cache per step (pad slots keep pos = -1 → masked; ring
+                # writes stay modulo the logical window, see cache_update)
+                from repro.kernels.decode_attention import padded_cache_len
+
+                psize = padded_cache_len(size)
+                qshape = (nb, batch, m.num_kv_heads, psize, m.head_dim)
+                c = L.KVCache(jnp.zeros(qshape, jnp.int8),
+                              jnp.zeros(qshape, jnp.int8),
+                              jnp.zeros(qshape[:-1], jnp.float32),
+                              jnp.zeros(qshape[:-1], jnp.float32),
+                              jnp.full((nb, batch, psize), -1, jnp.int32))
             else:
+                shape = (nb, batch, size, m.num_kv_heads, m.head_dim)
                 c = L.KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
                               None, None, jnp.full((nb, batch, size), -1, jnp.int32))
         else:

@@ -1,10 +1,16 @@
-"""Batched serving engine: prefill + autoregressive decode with KV caches.
+"""Batched serving engine: one jitted prefill + on-device decode loop.
+
+``generate`` lowers the ENTIRE generation — prefill, a ``lax.scan`` over
+decode steps, and on-device greedy/temperature sampling — as one jitted
+function: no per-token host round-trip, a single device→host copy of the
+finished token matrix at the end. With ``RuntimeOpts.quantized_kv`` the
+decode steps inside the scan stream the int8 KV cache through the Pallas
+``kernels.decode_attention`` kernel (the §Roofline fast path).
 
 Requests are batched by equal prompt length (length bucketing — the
 production-standard strategy when no per-row attention masking is wired
-through). Sampling: greedy or temperature. ``serve_step`` (one decode step
-for the whole batch) is the function the dry-run lowers for the decode
-shapes.
+through). ``serve_step`` (one decode step for the whole batch) remains the
+function the dry-run lowers for the decode shapes.
 """
 
 from __future__ import annotations
@@ -16,8 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models.transformer import (RuntimeOpts, decode_step, init_caches,
-                                      prefill)
+from repro.models.transformer import RuntimeOpts, decode_step, prefill
 
 
 @dataclasses.dataclass
@@ -33,15 +38,55 @@ class Engine:
         self.params = params
         self.opts = opts
         self.cache_len = cache_len
-        self._prefill = jax.jit(
-            lambda p, t, patches: prefill(p, cfg, t, patches, cache_len, opts))
-        self._step = jax.jit(
-            lambda p, t, caches, pos: decode_step(p, cfg, t, caches, pos, opts))
+        self._gen_fns: dict = {}
 
-    def _sample(self, logits, key, temperature: float):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(key, logits / temperature, axis=-1)
+    def generate_fn(self, max_new_tokens: int, greedy: bool = True):
+        """The fused loop: jitted ``fn(params, tokens, patches, rng,
+        temperature) → (B, prompt + max_new_tokens) tokens``, everything on
+        device. Temperature is a traced operand (ignored when ``greedy``), so
+        per-request temperatures don't recompile the loop; only
+        (max_new_tokens, greedy) key the compile cache.
+
+        The token loop is a ``lax.scan`` whose carry is (logits, caches, pos);
+        sampling happens inside the scan, so nothing crosses to the host
+        between steps (verified by jit-tracing this function abstractly)."""
+        assert max_new_tokens >= 1, "the fused loop samples at least one token"
+        key = (int(max_new_tokens), bool(greedy))
+        if key in self._gen_fns:
+            return self._gen_fns[key]
+        cfg, opts, cache_len = self.cfg, self.opts, self.cache_len
+        max_new = int(max_new_tokens)
+
+        def fn(params, tokens, patches, rng, temperature):
+            def sample(logits, step_key):
+                if greedy:
+                    return jnp.argmax(logits, axis=-1)
+                return jax.random.categorical(
+                    step_key, logits / temperature, axis=-1)
+
+            b, s = tokens.shape[:2]
+            logits, caches = prefill(params, cfg, tokens, patches, cache_len,
+                                     opts)
+            keys = jax.random.split(rng, max_new)
+
+            def body(carry, step_key):
+                logits, caches, pos = carry
+                nxt = sample(logits, step_key)  # (B,) or (B, K)
+                tok = nxt[:, None].astype(tokens.dtype)
+                logits, caches = decode_step(params, cfg, tok, caches, pos,
+                                             opts)
+                return (logits, caches, pos + 1), nxt
+
+            # max_new - 1 decode steps; the last sampled token needs no step
+            (logits, caches, _), toks = jax.lax.scan(
+                body, (logits, caches, jnp.int32(s)), keys[:-1])
+            last = sample(logits, keys[-1])
+            toks = jnp.concatenate([toks, last[None]], axis=0)
+            toks = jnp.moveaxis(toks, 0, 1).astype(tokens.dtype)
+            return jnp.concatenate([tokens, toks], axis=1)
+
+        self._gen_fns[key] = jax.jit(fn)
+        return self._gen_fns[key]
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  temperature: float = 0.0, patches=None, seed: int = 0,
@@ -50,21 +95,20 @@ class Engine:
         tokens = jnp.asarray(prompts)
         b, s = tokens.shape[:2]
         assert s + max_new_tokens <= self.cache_len, "cache_len too small"
-        logits, caches = self._prefill(self.params, tokens,
-                                       None if patches is None else jnp.asarray(patches))
-        key = jax.random.PRNGKey(seed)
-        out = [tokens]
-        pos = s
-        for i in range(max_new_tokens):
-            key, sub = jax.random.split(key)
-            nxt = self._sample(logits, sub, temperature)  # (B,) or (B, K)
-            nxt = nxt[:, None].astype(tokens.dtype)  # (B, 1, ...)
-            out.append(nxt)
-            if i + 1 == max_new_tokens:
-                break
-            logits, caches = self._step(self.params, nxt, caches, jnp.int32(pos))
-            pos += 1
-        return GenerationResult(np.asarray(jnp.concatenate(out, axis=1)),
+        if max_new_tokens == 0:
+            return GenerationResult(np.asarray(tokens), 0)
+        # bucket the scan length to the next power of two (capped by the
+        # cache) so varying request lengths share a handful of compiles
+        # instead of one full prefill+scan XLA program per distinct length;
+        # the surplus steps are sliced off below
+        bucket = min(1 << (max_new_tokens - 1).bit_length(),
+                     self.cache_len - s)
+        fn = self.generate_fn(bucket, greedy=temperature <= 0)
+        out = fn(self.params, tokens,
+                 None if patches is None else jnp.asarray(patches),
+                 jax.random.PRNGKey(seed),
+                 jnp.float32(max(temperature, 1e-6)))
+        return GenerationResult(np.asarray(out[:, : s + max_new_tokens]),
                                 max_new_tokens)
 
 

@@ -95,6 +95,12 @@ class SplitEngine:
 
         self._edge_front = jax.jit(self._edge_front_fn, static_argnames=("decode",))
         self._cloud_back = jax.jit(self._cloud_back_fn, static_argnames=("decode",))
+        # device-side helpers for the generation loop: greedy head and
+        # sequence-buffer writes (index is a traced operand — one trace total)
+        self._next_token = jax.jit(lambda lg: jnp.argmax(lg, axis=-1)[:, None])
+        self._seq_write = jax.jit(
+            lambda buf, val, i: jax.lax.dynamic_update_slice(
+                buf, val.astype(buf.dtype), (0, i) + (0,) * (buf.ndim - 2)))
 
     # ------------------------------------------------------------- stages
 
@@ -147,10 +153,20 @@ class SplitEngine:
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  compress: bool = True) -> tuple:
-        """Greedy split-computing generation. Returns (tokens, SplitStats)."""
+        """Greedy split-computing generation. Returns (tokens, SplitStats).
+
+        The loop is host-orchestrated only where Algorithm 2 demands it (the
+        measured payload bits feed the deadline ladder); tokens and the
+        split-layer history live in preallocated device buffers and cross to
+        the host once, after the loop. The cloud segment's caches follow
+        ``opts.quantized_kv`` — with it set, cloud decode streams the int8
+        cache through the Pallas decode-attention kernel like ``Engine``."""
         cfg, opts = self.cfg, self.opts
         tokens = jnp.asarray(prompts)
         b, s = tokens.shape[:2]
+        # h_buf and the KV caches are sized by cache_len; past it,
+        # dynamic_update_slice would clamp and silently corrupt the history
+        assert s + max_new_tokens <= self.cache_len, "cache_len too small"
         stats = SplitStats()
 
         nfront, nback = self.split_block, cfg.num_blocks - self.split_block
@@ -173,13 +189,21 @@ class SplitEngine:
                                                 jnp.int32(0), decode=False)
         stats.uplink_bits_eq3 += self._eq3_bits(s, self.opsc.i_kv)
 
-        h_history = [h]  # kept for the stateless-cloud (I_kv=0) fallback
-        out = [np.asarray(tokens)]
+        # Preallocated device buffers (no unbounded Python-list concat, no
+        # per-token host copy): split-layer history for the stateless-cloud
+        # (I_kv=0) fallback, and the generated-token matrix — both read back
+        # to the host exactly once, after the loop.
+        h_buf = jnp.zeros((b, self.cache_len) + h.shape[2:], h.dtype)
+        h_buf = self._seq_write(h_buf, h, jnp.int32(0))
+        tok_buf = jnp.zeros((b, max_new_tokens) + tokens.shape[2:], tokens.dtype)
+        n_hist = s
+        n_out = 0
         i_kv = self.opsc.i_kv
         pos = s
         for step in range(max_new_tokens):
-            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
-            out.append(np.asarray(nxt))
+            nxt = self._next_token(logits).astype(tokens.dtype)
+            tok_buf = self._seq_write(tok_buf, nxt, jnp.int32(step))
+            n_out = step + 1
             if step + 1 == max_new_tokens:
                 break
             h, edge_caches = self._edge_front(self.edge_params["blocks"],
@@ -207,7 +231,8 @@ class SplitEngine:
             stats.uplink_bits_measured += bits
             stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
 
-            h_history.append(h_c)
+            h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
+            n_hist += 1
             if i_kv:
                 logits, cloud_caches = self._cloud_back(
                     self.cloud_params["blocks"], self.cloud_params, h_c,
@@ -215,7 +240,7 @@ class SplitEngine:
             else:
                 # stateless cloud: re-run the back segment over the history
                 # (the paper's "losing the benefits of the cache")
-                hist = jnp.concatenate(h_history, axis=1)
+                hist = h_buf[:, :n_hist]
                 fresh = jax.tree_util.tree_map(
                     lambda a: a[self.split_block:],
                     init_caches(cfg, b, self.cache_len, opts))
@@ -225,4 +250,5 @@ class SplitEngine:
             pos += 1
             stats.tokens_generated += 1
 
-        return np.concatenate(out, axis=1), stats
+        out = np.asarray(tok_buf[:, :n_out])
+        return np.concatenate([np.asarray(tokens), out], axis=1), stats

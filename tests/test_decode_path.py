@@ -1,0 +1,212 @@
+"""The wired Pallas fast path: quantized-cache decode parity against the
+pure-jnp oracle, head-major cache writes, the fused on-device generation
+loop, and the no-host-transfer guarantee (the whole loop jit-traces
+abstractly)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import AttnSpec
+from repro.kernels import ref
+from repro.models import layers as L
+from repro.models.transformer import (RuntimeOpts, decode_step, init_caches,
+                                      init_params, prefill)
+from repro.serving.engine import Engine
+
+OPTS = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False, moe_capacity_factor=0.0)
+OPTS_Q = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False, quantized_kv=True,
+                     moe_capacity_factor=0.0)
+
+
+# ----------------------------------------------- quantized decode parity
+
+
+@pytest.mark.parametrize("h,kh", [(4, 2), (6, 1), (4, 4)])  # K<H and K=H
+@pytest.mark.parametrize("s,fill", [(96, 96), (80, 50)])  # full and
+# partially-filled caches (empty slots masked via pos = -1); trailing-block
+# padding itself (s % block_s != 0) is covered by test_kernels.py
+def test_quantized_decode_matches_oracle(h, kh, s, fill):
+    """The dispatch layer (cache_update + Pallas kernel, interpret=True on
+    CPU) must match kernels.ref.decode_attention_ref on the same cache."""
+    hd = 32
+    b = 2
+    rng = np.random.default_rng(h * 100 + s)
+    spec = AttnSpec(num_heads=h, num_kv_heads=kh, head_dim=hd)
+    cache = L.init_cache(b, s, kh, hd, quantized=True)
+    k_new = jnp.asarray(rng.normal(size=(b, fill, kh, hd)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(b, fill, kh, hd)), jnp.float32)
+    cache = L.cache_update(cache, k_new, v_new, jnp.int32(0))
+    assert cache.k.shape == (b, kh, s, hd) and cache.k.dtype == jnp.int8
+    assert cache.k_scale.shape == (b, kh, s)
+
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)), jnp.float32)
+    q_pos = jnp.int32(fill - 1)
+    out = L.quantized_decode_attention(q, cache, spec, None, q_pos)
+    qh = q[:, 0].reshape(b, kh, h // kh, hd)
+    want = ref.decode_attention_ref(qh, cache.k, cache.k_scale, cache.v,
+                                    cache.v_scale, cache.pos, q_pos)
+    np.testing.assert_allclose(np.asarray(out[:, 0].reshape(b, kh, h // kh, hd)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_quantized_decode_step_close_to_fp_reference():
+    """End-to-end through decode_step: the kernel-backed quantized cache must
+    track the fp-cache decode within int8 quantization error, with a cache_len
+    that spans multiple kernel blocks and is not block-aligned."""
+    cfg = get_config("internlm2-20b").tiny()  # GQA, no softcap → kernel path
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    s = 24
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s + 1)), jnp.int32)
+
+    _, caches = prefill(params, cfg, tokens[:, :s], None, cache_len=40, opts=OPTS)
+    want, _ = decode_step(params, cfg, tokens[:, s:], caches, jnp.int32(s), OPTS)
+    _, caches_q = prefill(params, cfg, tokens[:, :s], None, cache_len=40,
+                          opts=OPTS_Q)
+    got, _ = decode_step(params, cfg, tokens[:, s:], caches_q, jnp.int32(s),
+                         OPTS_Q)
+    scale = float(jnp.maximum(jnp.max(jnp.abs(want)), 1e-3))
+    assert float(jnp.max(jnp.abs(got - want))) / scale < 0.08
+
+
+def test_quantized_cache_layout_and_bytes():
+    """init_caches emits the kv-head-major int8 layout the kernel streams."""
+    cfg = get_config("llama2-7b").tiny()
+    caches = jax.eval_shape(lambda: init_caches(cfg, 2, 32, OPTS_Q))
+    c = caches[0]
+    m = cfg.pattern[0].mixer
+    assert c.k.shape == (cfg.num_blocks, 2, m.num_kv_heads, 32, m.head_dim)
+    assert c.k.dtype == jnp.int8 and c.v.dtype == jnp.int8
+    assert c.k_scale.shape == (cfg.num_blocks, 2, m.num_kv_heads, 32)
+    fp = jax.eval_shape(lambda: init_caches(cfg, 2, 32, OPTS))[0]
+    int8_bytes = c.k.size + c.k_scale.size * 4
+    fp_bytes = fp.k.size * fp.k.dtype.itemsize
+    assert int8_bytes < fp_bytes  # Eq. 2: the quantized cache is smaller
+
+
+# ------------------------------------------------- fused generation loop
+
+
+def test_engine_fused_loop_matches_stepwise_greedy():
+    """Regression: the on-device scan must reproduce the per-step host loop
+    exactly for greedy sampling."""
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (3, 8))
+    got = eng.generate(prompts, max_new_tokens=6).tokens
+
+    # reference: the old host-stepped loop
+    tokens = jnp.asarray(prompts, jnp.int32)
+    logits, caches = prefill(params, cfg, tokens, None, 64, OPTS)
+    out = [tokens]
+    pos = 8
+    for i in range(6):
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
+        out.append(nxt)
+        if i + 1 < 6:
+            logits, caches = decode_step(params, cfg, nxt, caches,
+                                         jnp.int32(pos), OPTS)
+            pos += 1
+    want = np.asarray(jnp.concatenate(out, axis=1))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_fused_loop_quantized_kv():
+    """The fused loop composes with the int8-cache kernel path (scan over
+    Pallas interpret calls) and still decodes deterministically."""
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, OPTS_Q, cache_len=48)
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 8))
+    a = eng.generate(prompts, max_new_tokens=5).tokens
+    b = eng.generate(prompts, max_new_tokens=5).tokens
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a[:, :8], prompts)
+    assert a.shape == (2, 13)
+
+
+def test_engine_length_bucketing_shares_compiles():
+    """Varying max_new_tokens bucket to a power of two: one compiled loop
+    serves both, and greedy outputs are prefix-consistent."""
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    prompts = np.random.default_rng(5).integers(0, cfg.vocab_size, (2, 8))
+    a = eng.generate(prompts, 5).tokens
+    b = eng.generate(prompts, 6).tokens
+    assert len(eng._gen_fns) == 1  # 5 and 6 both bucket to 8
+    assert a.shape == (2, 13) and b.shape == (2, 14)
+    np.testing.assert_array_equal(a, b[:, :13])
+
+
+def test_engine_generate_zero_new_tokens():
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    prompts = np.random.default_rng(2).integers(0, cfg.vocab_size, (2, 8))
+    res = eng.generate(prompts, max_new_tokens=0)
+    np.testing.assert_array_equal(res.tokens, prompts)
+
+
+def test_quantized_cache_block_aligned_and_decodes():
+    """Slot axes of big quantized caches are rounded up to whole kernel
+    blocks (no per-step jnp.pad of the cache), pad slots masked via pos=-1."""
+    from repro.kernels.decode_attention import padded_cache_len
+
+    assert padded_cache_len(600, 512) == 1024
+    assert padded_cache_len(40, 512) == 40  # single block: no padding
+    cfg = get_config("llama2-7b").tiny()
+    caches = jax.eval_shape(lambda: init_caches(cfg, 1, 600, OPTS_Q))
+    assert caches[0].k.shape[3] == 1024 and caches[0].pos.shape[2] == 1024
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    logits, caches = prefill(params, cfg, tokens, None, cache_len=600,
+                             opts=OPTS_Q)
+    logits, _ = decode_step(params, cfg, tokens[:, :1], caches, jnp.int32(8),
+                            OPTS_Q)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_ring_write_stays_within_window_on_padded_cache():
+    """A block-padded sliding-window cache must wrap modulo the WINDOW, so no
+    stored position can be older than the window and pad slots stay empty."""
+    b, kh, hd, window, alloc = 1, 1, 8, 16, 24
+    cache = L.KVCache(jnp.zeros((b, kh, alloc, hd), jnp.int8),
+                      jnp.zeros((b, kh, alloc, hd), jnp.int8),
+                      jnp.zeros((b, kh, alloc), jnp.float32),
+                      jnp.zeros((b, kh, alloc), jnp.float32),
+                      jnp.full((b, alloc), -1, jnp.int32))
+    rng = np.random.default_rng(4)
+    for pos in range(40):
+        kv = jnp.asarray(rng.normal(size=(b, 1, kh, hd)), jnp.float32)
+        cache = L.cache_update(cache, kv, kv, jnp.int32(pos), window=window)
+    stored = np.asarray(cache.pos[0])
+    assert np.all(stored[window:] == -1)  # pad slots never written
+    assert set(stored[:window]) == set(range(40 - window, 40))
+
+
+def test_engine_generate_has_no_host_transfer_in_loop():
+    """Acceptance: the whole generation — prefill, decode scan, sampling —
+    jit-traces with abstract inputs. Any host round-trip inside the loop
+    (np.asarray, float(), .item()) would raise a TracerError here."""
+    cfg = get_config("llama2-7b").tiny()
+    eng = Engine(cfg, params=None, opts=OPTS, cache_len=64)
+    fn = eng.generate_fn(max_new_tokens=6, greedy=True)
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    tokens = jax.ShapeDtypeStruct((3, 8), jnp.int32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    temp = jax.ShapeDtypeStruct((), jnp.float32)
+    out = jax.eval_shape(fn, params, tokens, None, key, temp)
+    assert out.shape == (3, 14)
+    # the temperature-sampling branch traces too — and temperature is a
+    # traced operand, so per-request temperatures share one compile
+    fn_t = eng.generate_fn(max_new_tokens=4, greedy=False)
+    out = jax.eval_shape(fn_t, params, tokens, None, key, temp)
+    assert out.shape == (3, 12)
+    assert fn_t is eng.generate_fn(max_new_tokens=4, greedy=False)

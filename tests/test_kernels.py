@@ -124,7 +124,9 @@ def test_ts_mask_counts_per_tile():
 # ----------------------------------------------- decode attention kernel
 
 
-@pytest.mark.parametrize("s,bs", [(64, 64), (128, 32), (256, 64)])
+@pytest.mark.parametrize("s,bs", [(64, 64), (128, 32), (256, 64),
+                                  (80, 32), (200, 64)])  # s % bs != 0 → the
+# trailing block is padded in-kernel and masked via kv_pos = -1
 @pytest.mark.parametrize("g,kh", [(4, 2), (6, 1), (1, 4)])
 def test_decode_attention_matches_ref(s, bs, g, kh):
     from repro.kernels.ops import decode_attention
