@@ -8,6 +8,12 @@ the serving path, not a side gallery:
       decode-time attention over a quantized cache here (see
       ``quantized_decode_attention``); ``RuntimeOpts.quantized_kv=True``
       makes both serving engines take this path inside their fused loops.
+  paged_decode_attention — the same online-softmax block walk re-addressed
+      through per-request BLOCK TABLES (``pltpu.PrefetchScalarGridSpec``):
+      each (request, kv-head) program gathers its pages from the shared
+      ``serving.kv_pool`` pool, with per-request causal bounds for ragged
+      continuous batching. ``models.layers.paged_decode_attention_layer``
+      routes every decode over a ``PagedKVCache`` here.
   tabq_kernel — per-token TAB-Q magnitude quantization (Eq. 5-6), int8
       code carrier (codes rebased per token to [0, Q_max]).
   dequant_matmul — int8-weight × fp-activation matmul with per-channel

@@ -33,12 +33,24 @@ NEG_INF = -1e30
 BLOCK_S = 512  # default sequence-block size of the grid's minor axis
 
 
-def padded_cache_len(s: int, block_s: int = BLOCK_S) -> int:
-    """Round a cache length up to a whole number of kernel blocks. Callers
-    that allocate caches at this size (pad slots carry ``kv_pos = -1``) keep
-    the per-step path copy-free; other lengths still work via the pad-on-call
-    fallback below."""
-    if s <= block_s:
+def padded_cache_len(s: int, block_s: int = BLOCK_S, uniform: bool = False) -> int:
+    """Round a cache length up to a whole number of kernel blocks.
+
+    With ``uniform=False`` (default — the dense-cache contract), a length
+    ``s <= block_s`` is returned UNPADDED: the dense kernel clamps its block
+    size to ``min(block_s, s)``, so a single short block needs no padding.
+    Callers that allocate caches at this size (pad slots carry
+    ``kv_pos = -1``) keep the per-step path copy-free; other lengths still
+    work via the pad-on-call fallback below.
+
+    With ``uniform=True``, every length — including ``s <= block_s`` — is
+    rounded up to whole ``block_s``-sized blocks. This is the PAGED-POOL
+    contract: ``serving.kv_pool`` pages must all be exactly one block long
+    (the block-table index map addresses the pool in fixed page strides), so
+    the short-block exemption above would produce a non-uniform final page.
+    The pool rejects non-multiple lengths with a clear error and points here.
+    """
+    if not uniform and s <= block_s:
         return s  # a single (possibly short) block — no padding needed
     return -(-s // block_s) * block_s
 

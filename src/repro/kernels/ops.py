@@ -57,3 +57,14 @@ def decode_attention(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos,
     interpret = _default_interpret() if interpret is None else interpret
     return _da(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos,
                block_s, interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_codes, k_scale, v_codes, v_scale, pool_pos,
+                           block_table, q_pos, interpret: bool | None = None):
+    from repro.kernels.paged_decode_attention import \
+        paged_decode_attention as _pda
+
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pda(q, k_codes, k_scale, v_codes, v_scale, pool_pos, block_table,
+                q_pos, interpret)

@@ -50,12 +50,41 @@ def decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, kv_pos, q_pos):
     """Dense oracle for the int8-KV decode-attention kernel.
 
     q (B,K,G,hd); codes (B,K,S,hd) int8 with scales (B,K,S); kv_pos (B,S);
-    q_pos scalar → (B,K,G,hd) f32."""
+    q_pos scalar or (B,) per-request → (B,K,G,hd) f32."""
     hd = q.shape[-1]
     k = k_codes.astype(jnp.float32) * k_scale[..., None]
     v = v_codes.astype(jnp.float32) * v_scale[..., None]
     s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32), k) / (hd ** 0.5)
-    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos), (q.shape[0],))
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
     s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgs,bksd->bkgd", p, v)
+
+
+def gather_pages_ref(pool_leaf, block_table):
+    """Gather a request's pages from a shared pool into dense per-request
+    layout — the paged↔dense bridge both oracles and tests rely on.
+
+    pool_leaf (P, K, page, ...) or (P, page); block_table (R, nb) →
+    dense (R, K, nb·page, ...) or (R, nb·page) in block-table order."""
+    g = pool_leaf[block_table]  # (R, nb, K, page, ...) or (R, nb, page)
+    if pool_leaf.ndim == 2:
+        return g.reshape(g.shape[0], -1)
+    g = jnp.moveaxis(g, 2, 1)  # (R, K, nb, page, ...)
+    return g.reshape(g.shape[0], g.shape[1], -1, *g.shape[4:])
+
+
+def paged_decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale,
+                               pool_pos, block_table, q_pos):
+    """Paged oracle: gather each request's pages dense (via the block table),
+    then run :func:`decode_attention_ref` with per-request causal bounds.
+
+    q (R,K,G,hd); pool codes (P,K,page,hd) int8 with scales (P,K,page);
+    pool_pos (P,page); block_table (R,nb) int32; q_pos (R,) → (R,K,G,hd)."""
+    kc = gather_pages_ref(k_codes, block_table)
+    ks = gather_pages_ref(k_scale, block_table)
+    vc = gather_pages_ref(v_codes, block_table)
+    vs = gather_pages_ref(v_scale, block_table)
+    kv_pos = gather_pages_ref(pool_pos, block_table)
+    return decode_attention_ref(q, kc, ks, vc, vs, kv_pos, q_pos)

@@ -1,9 +1,11 @@
 """Assigned input shapes and per-(arch × shape) lowering targets.
 
-  train_4k     seq 4,096    global_batch 256   → train_step (grad-accum scan)
-  prefill_32k  seq 32,768   global_batch 32    → chunked prefill
-  decode_32k   seq 32,768   global_batch 128   → serve_step (1 token, full KV)
-  long_500k    seq 524,288  global_batch 1     → serve_step, context-parallel
+  train_4k        seq 4,096    global_batch 256  → train_step (grad-accum scan)
+  prefill_32k     seq 32,768   global_batch 32   → chunked prefill
+  decode_32k      seq 32,768   global_batch 128  → serve_step (1 token, full KV)
+  long_500k       seq 524,288  global_batch 1    → serve_step, context-parallel
+  paged_decode_32k seq 32,768  global_batch 128  → paged_decode_step (ragged
+                                                   pool, block-table kernel)
 
 ``input_specs(cfg, shape, mesh)`` returns (fn, args) where args are
 ShapeDtypeStructs with NamedShardings attached — weak-type-correct,
@@ -41,15 +43,27 @@ SHAPES = {
     "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
     "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
     "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+    # ragged continuous-batching decode: one paged_decode_step over a shared
+    # kv_pool at decode_32k scale — kernel pages of BLOCK_S, pool page axis
+    # sharded over the data axes, block tables replicated
+    "paged_decode_32k": ShapeSpec("paged_decode_32k", 32768, 128,
+                                  "paged_decode"),
 }
 
 MICRO_GLOBAL = 32  # tokensets per grad-accum microbatch (train_4k)
 
 
 def supports(cfg: ArchConfig, shape: ShapeSpec) -> bool:
-    """long_500k only for sub-quadratic stacks (DESIGN.md §Arch-applicability)."""
+    """long_500k only for sub-quadratic stacks (DESIGN.md §Arch-applicability);
+    the paged pool covers attention-only patterns without sliding windows
+    (see serving.kv_pool)."""
     if shape.name == "long_500k":
         return cfg.supports_long_context
+    if shape.kind == "paged_decode":
+        from repro.configs.base import AttnSpec
+
+        return all(isinstance(ls.mixer, AttnSpec)
+                   and ls.mixer.sliding_window is None for ls in cfg.pattern)
     return True
 
 
@@ -75,10 +89,11 @@ def default_opts(cfg: ArchConfig, shape: ShapeSpec, **overrides) -> RuntimeOpts:
     base = dict(q_chunk=1024, kv_chunk=1024, remat=True,
                 # paper's Q^a on the cache: kv-head-major int8 codes +
                 # per-(token, head) f32 scales (the Pallas decode-attention
-                # layout — init_caches/cache_specs carry the dtypes/shapes)
-                quantized_kv=shape.kind == "decode",
+                # layout — init_caches/cache_specs carry the dtypes/shapes;
+                # the paged pool is int8 by construction)
+                quantized_kv=shape.kind in ("decode", "paged_decode"),
                 moe_capacity_factor=1.25)
-    if shape.kind == "decode":
+    if shape.kind in ("decode", "paged_decode"):
         # single KV block: no scan over a sharded cache dim (DESIGN.md §5);
         # bf16 SSD-state storage (f32 compute) — jamba fit fix
         base.update(kv_chunk=shape.seq_len, q_chunk=1, remat=False,
@@ -242,6 +257,61 @@ def decode_target(cfg: ArchConfig, shape: ShapeSpec, mesh, opts: RuntimeOpts,
     return fn, (params, tokens, caches, pos)
 
 
+def paged_decode_target(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                        opts: RuntimeOpts, param_dtype=jnp.bfloat16):
+    """One ragged ``paged_decode_step`` over a worst-case-sized kv_pool:
+    pool page axis sharded over the data axes (pages are independent; the
+    block-table gather crosses shards only at page granularity), block
+    tables and per-request positions replicated."""
+    from repro.kernels.decode_attention import BLOCK_S
+    from repro.models import layers as L
+    from repro.models.transformer import abstract_params, paged_decode_step
+
+    dax = data_axes(mesh)
+    fsdp = cfg.total_params() * 2 / mesh.shape["model"] > 8e9
+    params = shd.to_shaped(abstract_params(cfg, param_dtype),
+                           shd.param_specs(cfg, mesh, fsdp=fsdp), mesh)
+    b = shape.global_batch
+    page = min(BLOCK_S, shape.seq_len)
+    maxb = -(-shape.seq_len // page)
+    # worst-case reservation + trash page, rounded so the sharded page axis
+    # divides the data-axis size
+    dsz = data_size(mesh)
+    num_pages = -(-(b * maxb + 1) // dsz) * dsz
+    nb = cfg.num_blocks
+    m = cfg.pattern[0].mixer
+    kh, hd = m.num_kv_heads, m.head_dim
+
+    def leaf(shp, dtype, spec):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, P(*spec)))
+
+    caches = tuple(
+        L.PagedKVCache(
+            k=leaf((nb, num_pages, kh, page, hd), jnp.int8,
+                   (None, dax, None, None, None)),
+            v=leaf((nb, num_pages, kh, page, hd), jnp.int8,
+                   (None, dax, None, None, None)),
+            k_scale=leaf((nb, num_pages, kh, page), jnp.float32,
+                         (None, dax, None, None)),
+            v_scale=leaf((nb, num_pages, kh, page), jnp.float32,
+                         (None, dax, None, None)),
+            pos=leaf((nb, num_pages, page), jnp.int32, (None, dax, None)),
+            block_table=leaf((nb, b, maxb), jnp.int32, (None, None, None)),
+        )
+        for _ in cfg.pattern)
+    b_axes = dax if b % data_size(mesh) == 0 else None
+    tokens = _token_struct(cfg, b, 1, mesh, b_axes)
+    pos = leaf((b,), jnp.int32, (None,))
+
+    def fn(params, tokens, caches, pos):
+        logits, new_caches = paged_decode_step(params, cfg, tokens, caches,
+                                               pos, opts)
+        return jnp.argmax(logits, axis=-1), new_caches
+
+    return fn, (params, tokens, caches, pos)
+
+
 def get_target(cfg: ArchConfig, shape_name: str, mesh, **opt_overrides):
     shape = SHAPES[shape_name]
     opts = default_opts(cfg, shape, **opt_overrides)
@@ -249,4 +319,6 @@ def get_target(cfg: ArchConfig, shape_name: str, mesh, **opt_overrides):
         return train_target(cfg, shape, mesh, opts)
     if shape.kind == "prefill":
         return prefill_target(cfg, shape, mesh, opts)
+    if shape.kind == "paged_decode":
+        return paged_decode_target(cfg, shape, mesh, opts)
     return decode_target(cfg, shape, mesh, opts)

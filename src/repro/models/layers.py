@@ -3,12 +3,16 @@ sinusoidal), GQA attention with flash-style double-chunked online softmax
 (pure JAX for training/prefill — attention stays XLA-fusable and
 differentiable), SwiGLU/GELU MLPs, and KV caches.
 
-Caches come in two layouts:
+Caches come in three layouts:
   * fp (bf16/f32): token-major (B, S, K, hd) — read by chunked_attention;
   * int8-quantized: kv-head-major (B, K, S, hd) codes + per-(token, head)
     scales (B, K, S) — the exact layout streamed by the Pallas
     ``kernels.decode_attention`` kernel, which decode-time attention routes
-    to (see :func:`quantized_decode_attention`).
+    to (see :func:`quantized_decode_attention`);
+  * paged (``PagedKVCache``): the int8 layout cut into fixed pages of a
+    shared pool addressed by per-request block tables — ragged batches from
+    ``serving.kv_pool``, streamed by ``kernels.paged_decode_attention``
+    (see :func:`paged_decode_attention_layer`).
 
 Shapes: activations (B, S, D); q/k/v (B, S, H|K, hd).
 """
@@ -118,6 +122,46 @@ jax.tree_util.register_pytree_node(
 )
 
 
+@dataclasses.dataclass
+class PagedKVCache:
+    """Per-layer view of the shared paged KV pool (a pytree) — int8 codes +
+    f32 scales in PAGE-major layout, addressed through per-request block
+    tables instead of a dense per-request sequence axis. Allocation lives in
+    ``serving.kv_pool``; this type is what flows through the block scan and
+    what ``attention_layer`` routes on.
+
+      k / v        (P, K, page, hd) int8    k/v_scale (P, K, page) f32
+      pos          (P, page) int32          (-1 = empty slot)
+      block_table  (R, max_blocks) int32    (page ids; 0 = reserved trash
+                                             page for pads/inactive rows)
+
+    Unlike the dense ``KVCache`` there is no batch axis on the pool leaves:
+    requests of ragged lengths share the pool, and a request's cache is the
+    gather of its block-table pages."""
+
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+    pos: jax.Array
+    block_table: jax.Array
+
+    @property
+    def quantized(self) -> bool:
+        return True
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-2]
+
+
+jax.tree_util.register_pytree_node(
+    PagedKVCache,
+    lambda c: ((c.k, c.v, c.k_scale, c.v_scale, c.pos, c.block_table), None),
+    lambda _, ch: PagedKVCache(*ch),
+)
+
+
 def init_cache(batch: int, size: int, kv_heads: int, head_dim: int,
                dtype=jnp.bfloat16, quantized: bool = False) -> KVCache:
     if quantized:  # kv-head-major kernel layout
@@ -194,6 +238,52 @@ def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
                        write_pos(cache.pos))
     return KVCache(write(cache.k, k_new), write(cache.v, v_new), None, None,
                    write_pos(cache.pos))
+
+
+def paged_cache_update(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
+                       positions: jax.Array) -> PagedKVCache:
+    """Scatter ``k_new``/``v_new`` (R, S_new, K, hd) into the shared pool.
+
+    ``positions`` (R, S_new) carries each token's ABSOLUTE position; negative
+    entries are ragged-prefill pads (or inactive decode slots) and are routed
+    to the reserved trash page 0 with ``pos = -1``, so they can never be
+    attended — as is a position past the block table's reach or one whose
+    table entry is still unallocated (a caller that skipped the host-side
+    ``PagedKVPool.append`` would otherwise corrupt a live page or leak a
+    real position onto the shared trash page). Valid tokens land at
+    page ``block_table[r, p // page]``, slot ``p % page`` — distinct
+    positions of a request hit distinct (page, slot) pairs, so every valid
+    scatter index is unique. Quantization is the same per-(token, head) int8
+    transform as the dense cache (bit-identical codes — the dense↔paged
+    parity tests rely on this)."""
+    page = cache.page_size
+    r, s_new = positions.shape
+    nbt = cache.block_table.shape[1]
+    valid = (positions >= 0) & (positions < nbt * page)
+    page_idx = jnp.where(valid, positions // page, 0)
+    pages = jnp.where(valid,
+                      jnp.take_along_axis(cache.block_table, page_idx, axis=1),
+                      0)
+    # a position whose block-table entry is still 0 (page not yet allocated)
+    # must not store a real pos on the shared trash page — every request's
+    # unused table entries point there, so it would leak across requests
+    valid = valid & (pages != 0)
+    slots = jnp.where(valid, positions % page, 0)
+    pr, sl = pages.reshape(-1), slots.reshape(-1)
+
+    kc, ks = _quantize_kv(k_new)  # (R, S_new, K, hd), (R, S_new, K, 1)
+    vc, vs = _quantize_kv(v_new)
+
+    def put(buf, val):  # buf (P, K, page[, hd]); val (R, S_new, K[, hd])
+        flat = val.reshape((r * s_new,) + val.shape[2:])
+        return buf.at[pr, :, sl].set(flat.astype(buf.dtype))
+
+    new_pos = cache.pos.at[pr, sl].set(
+        jnp.where(valid, positions, -1).reshape(-1))
+    return PagedKVCache(put(cache.k, kc), put(cache.v, vc),
+                        put(cache.k_scale, ks[..., 0]),
+                        put(cache.v_scale, vs[..., 0]),
+                        new_pos, cache.block_table)
 
 
 # ---------------------------------------------------------------------------
@@ -358,6 +448,45 @@ def quantized_decode_attention(q, cache: KVCache, spec, q_positions, pos, *,
                              q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
+def paged_decode_attention_layer(q, cache: PagedKVCache, spec, q_positions, *,
+                                 q_chunk=1024, kv_chunk=1024):
+    """Decode-time attention through the PAGED pool.
+
+    Kernel-eligible layers — single-token query, no logit softcap — walk
+    their block-table pages with the Pallas ``paged_decode_attention`` kernel
+    (scalar-prefetch gather, per-request causal bounds for ragged batches).
+    Softcapped layers gather their pages dense via the block table and
+    dequantize into ``chunked_attention`` — correct, not fast.
+
+    ``q_positions`` (R, S): the per-request absolute query positions; the
+    last column is each row's causal bound (-1 marks an inactive decode
+    slot, which masks every key and yields a finite all-zero output)."""
+    b, s, h, hd = q.shape
+    kh = cache.k.shape[1]
+    q_pos = q_positions[:, -1].astype(jnp.int32)
+    if s == 1 and spec.attn_softcap is None:
+        from repro.kernels.ops import paged_decode_attention
+
+        qh = q[:, 0].reshape(b, kh, h // kh, hd)
+        out = paged_decode_attention(qh, cache.k, cache.k_scale, cache.v,
+                                     cache.v_scale, cache.pos,
+                                     cache.block_table, q_pos)
+        return out.reshape(b, 1, h, hd).astype(q.dtype)
+    from repro.kernels.ref import gather_pages_ref
+
+    kd = gather_pages_ref(cache.k, cache.block_table)  # (R, K, S_pool, hd)
+    vd = gather_pages_ref(cache.v, cache.block_table)
+    ks = gather_pages_ref(cache.k_scale, cache.block_table)
+    vs = gather_pages_ref(cache.v_scale, cache.block_table)
+    kv_pos = gather_pages_ref(cache.pos, cache.block_table)
+    k = jnp.swapaxes(kd.astype(jnp.float32) * ks[..., None], 1, 2)
+    v = jnp.swapaxes(vd.astype(jnp.float32) * vs[..., None], 1, 2)
+    return chunked_attention(q, k, v, q_positions, kv_pos, causal=True,
+                             window=spec.sliding_window,
+                             softcap=spec.attn_softcap,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
 # ---------------------------------------------------------------------------
 # Attention layer (projections + rope + cache plumbing)
 # ---------------------------------------------------------------------------
@@ -406,9 +535,17 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
 
     new_cache = None
     if cache is not None:
-        new_cache = cache_update(cache, k, v, pos, spec.sliding_window)
+        if isinstance(cache, PagedKVCache):
+            # paged pool: positions are per-token (ragged prefill pads < 0)
+            new_cache = paged_cache_update(cache, k, v, q_positions)
+        else:
+            new_cache = cache_update(cache, k, v, pos, spec.sliding_window)
     if cache is not None and decode:
-        if new_cache.quantized:
+        if isinstance(new_cache, PagedKVCache):
+            out = paged_decode_attention_layer(
+                q, new_cache, spec, q_positions,
+                q_chunk=q_chunk, kv_chunk=kv_chunk)
+        elif new_cache.quantized:
             out = quantized_decode_attention(
                 q, new_cache, spec, q_positions, pos,
                 q_chunk=q_chunk, kv_chunk=kv_chunk)

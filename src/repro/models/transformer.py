@@ -374,3 +374,47 @@ def decode_step(params, cfg: ArchConfig, tokens, caches, pos,
                                      decode=True)
     logits = apply_head(cfg, params, x)
     return logits[:, 0], caches
+
+
+# --------------------------------------------------------- paged (ragged)
+
+
+def paged_prefill(params, cfg: ArchConfig, tokens, caches, positions,
+                  opts: RuntimeOpts = RuntimeOpts()):
+    """Ragged prefill over the paged KV pool.
+
+    ``tokens`` (R, S) RIGHT-ALIGNED: each row's prompt occupies the trailing
+    slots, left pads carry ``positions = -1``. ``positions`` (R, S) are the
+    per-row absolute positions (0..len-1 in the tail). Right alignment means
+    the LAST column is every row's final prompt token, so one slice yields
+    the next-token logits for the whole ragged batch; pad queries/keys are
+    masked by the negative positions, and pad cache writes land on the
+    pool's trash page. ``caches`` is the pool pytree from
+    ``serving.kv_pool.PagedKVPool.device_caches`` (block tables installed
+    for exactly these R rows). Returns (last_logits (R, V), caches)."""
+    positions = jnp.asarray(positions, jnp.int32)
+    x = embed_inputs(cfg, params, tokens, None, jnp.maximum(positions, 0))
+    rope_cs = rope_tables(cfg, positions)
+    x, caches = _apply_blocks_cached(cfg, params["blocks"], x, caches,
+                                     rope_cs=rope_cs, q_positions=positions,
+                                     pos=jnp.int32(0), opts=opts, decode=False)
+    logits = apply_head(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def paged_decode_step(params, cfg: ArchConfig, tokens, caches, pos,
+                      opts: RuntimeOpts = RuntimeOpts()):
+    """One RAGGED autoregressive step over the paged pool: ``pos`` is (R,)
+    int32 — each request decodes at its own absolute position (-1 marks an
+    inactive slot, whose write is routed to the trash page and whose
+    attention masks every key). This is the step the continuous-batching
+    scheduler jits once for the full slot count and reuses as requests come
+    and go."""
+    positions = jnp.asarray(pos, jnp.int32)[:, None]  # (R, 1)
+    x = embed_inputs(cfg, params, tokens, None, jnp.maximum(positions, 0))
+    rope_cs = rope_tables(cfg, positions)
+    x, caches = _apply_blocks_cached(cfg, params["blocks"], x, caches,
+                                     rope_cs=rope_cs, q_positions=positions,
+                                     pos=jnp.int32(0), opts=opts, decode=True)
+    logits = apply_head(cfg, params, x)
+    return logits[:, 0], caches

@@ -1,1 +1,9 @@
-"""Serving: batched engine + split-computing engine."""
+"""Serving: batched engine, split-computing engine, and the paged-KV
+continuous-batching stack (``kv_pool`` + ``scheduler``) for ragged
+multi-request decode from one shared memory pool — see README.md here."""
+
+from repro.serving.engine import Engine, GenerationResult  # noqa: F401
+from repro.serving.kv_pool import (PagedKVPool,  # noqa: F401
+                                   PoolExhaustedError)
+from repro.serving.scheduler import Request, Scheduler  # noqa: F401
+from repro.serving.split_engine import SplitEngine, SplitStats  # noqa: F401

@@ -44,14 +44,19 @@ class Engine:
         """The fused loop: jitted ``fn(params, tokens, patches, rng,
         temperature) → (B, prompt + max_new_tokens) tokens``, everything on
         device. Temperature is a traced operand (ignored when ``greedy``), so
-        per-request temperatures don't recompile the loop; only
-        (max_new_tokens, greedy) key the compile cache.
+        per-request temperatures don't recompile the loop;
+        (max_new_tokens, greedy) plus the engine's current ``cache_len`` and
+        ``opts`` key the compile cache — the closure bakes both in, so keying
+        on only (max_new_tokens, greedy) would silently serve a stale cache
+        size to a reconfigured live engine. Batch/prompt shapes need no key:
+        ``jax.jit`` retraces per input shape on its own.
 
         The token loop is a ``lax.scan`` whose carry is (logits, caches, pos);
         sampling happens inside the scan, so nothing crosses to the host
         between steps (verified by jit-tracing this function abstractly)."""
         assert max_new_tokens >= 1, "the fused loop samples at least one token"
-        key = (int(max_new_tokens), bool(greedy))
+        key = (int(max_new_tokens), bool(greedy), int(self.cache_len),
+               self.opts)
         if key in self._gen_fns:
             return self._gen_fns[key]
         cfg, opts, cache_len = self.cfg, self.opts, self.cache_len

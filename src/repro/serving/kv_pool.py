@@ -1,0 +1,309 @@
+"""Paged KV-cache pool: one shared block pool, per-request block tables.
+
+The paper's serving constraint is Eq. (2) — the KV cache is the term that
+grows with every generated token — and the dense per-request cache the seed
+engine allocates wastes exactly the memory the optimizer is trying to
+budget: every request holds ``cache_len`` slots regardless of its actual
+length, and a batch must be bucketed to equal prompt lengths to share the
+allocation. This module replaces that with the vLLM-style design: a single
+fixed-size pool of ``page_size``-token pages (int8 codes + f32 scales per
+page, ``kv_pos = -1`` marking empty slots), an allocator with free-list
+reuse, and per-request block tables ``(R, max_blocks) int32`` that the
+paged decode-attention kernel walks via its scalar-prefetch index map.
+
+Layout per pattern position (leading ``num_blocks`` axis consumed by the
+transformer's block scan, exactly like the dense caches):
+
+  k / v          (nb, P, K, page, hd) int8
+  k/v_scale      (nb, P, K, page)     f32
+  pos            (nb, P, page)        int32   (-1 = empty)
+  block_table    (nb, R, max_blocks)  int32   (host-owned, installed per call)
+
+Page 0 is RESERVED as the trash page: block-table entries of inactive rows
+and pad-token writes point at it, its positions stay -1, and the kernel's
+validity mask keeps it out of every softmax. The allocator therefore hands
+out pages [1, P).
+
+Lifecycle (driven by ``serving.scheduler``):
+  admit  — reserve ceil(prompt/page) pages + a slot row for a request
+  append — extend a live request's page list when its length crosses a
+           page boundary (raises ``PoolExhaustedError`` when the pool is
+           full — the scheduler's backpressure signal)
+  free   — return a finished request's pages to the free list (LIFO reuse)
+           and scrub their stored positions to -1 on device, so a future
+           request reusing the page can never attend stale tokens
+
+Occupancy is accounted two ways: ``page_bytes_in_use`` (page-granular, what
+the device actually holds, internal fragmentation included) and
+``eq2_bytes`` (the paper's analytical B_kv via ``core.opsc.kv_cache_bytes``
+at the pool's int8 activation width) — the gap between them IS the paging
+overhead the benchmark reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, AttnSpec
+from repro.models.layers import PagedKVCache
+
+TRASH_PAGE = 0
+DEFAULT_PAGE_SIZE = 16
+
+
+class PoolExhaustedError(RuntimeError):
+    """Raised when an admit/append needs more pages than the pool has free."""
+
+
+def uniform_page_count(seq_len: int, page_size: int) -> int:
+    """Pages needed to hold ``seq_len`` tokens in UNIFORM ``page_size`` pages
+    (``kernels.decode_attention.padded_cache_len(s, page_size, uniform=True)``
+    is the same rounding in token units)."""
+    return max(1, -(-seq_len // page_size))
+
+
+class PagedKVPool:
+    """Fixed-size paged KV pool + host-side block allocator (see module doc).
+
+    ``cfg`` must be an attention-only pattern without sliding windows (ring
+    writes inside fixed pages are a follow-on); ``num_blocks`` overrides
+    ``cfg.num_blocks`` so a split engine can pool just its cloud segment.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, num_pages: int,
+                 page_size: int = DEFAULT_PAGE_SIZE, max_requests: int,
+                 max_seq_len: int | None = None, num_blocks: int | None = None):
+        if page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {page_size}")
+        if num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is reserved)")
+        self.specs = []
+        for ls in cfg.pattern:
+            m = ls.mixer
+            if not isinstance(m, AttnSpec):
+                raise NotImplementedError(
+                    "PagedKVPool covers attention-only patterns; SSM/hybrid "
+                    f"states are fixed-size (no paging needed), got {m.kind}")
+            if m.sliding_window is not None:
+                raise NotImplementedError(
+                    "sliding-window layers ring-write inside their window; "
+                    "paged ring-append is not supported yet")
+            self.specs.append(m)
+        if len({(m.num_kv_heads, m.head_dim) for m in self.specs}) != 1:
+            raise NotImplementedError(
+                "pattern positions must share (num_kv_heads, head_dim)")
+
+        self.cfg = cfg
+        self.nb = cfg.num_blocks if num_blocks is None else num_blocks
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_requests = max_requests
+        max_seq_len = (num_pages - 1) * page_size if max_seq_len is None \
+            else max_seq_len
+        self.max_blocks = uniform_page_count(max_seq_len, page_size)
+        self.num_layers = self.nb * len(cfg.pattern)
+
+        kh, hd = self.specs[0].num_kv_heads, self.specs[0].head_dim
+        self.kv_heads, self.head_dim = kh, hd
+        nb, p, ps = self.nb, num_pages, page_size
+        self._caches = tuple(
+            PagedKVCache(
+                k=jnp.zeros((nb, p, kh, ps, hd), jnp.int8),
+                v=jnp.zeros((nb, p, kh, ps, hd), jnp.int8),
+                k_scale=jnp.zeros((nb, p, kh, ps), jnp.float32),
+                v_scale=jnp.zeros((nb, p, kh, ps), jnp.float32),
+                pos=jnp.full((nb, p, ps), -1, jnp.int32),
+                block_table=jnp.zeros((nb, max_requests, self.max_blocks),
+                                      jnp.int32),
+            )
+            for _ in cfg.pattern)
+
+        # host allocator state: LIFO free list (most-recently-freed page is
+        # reused first — keeps the hot pages hot), trash page 0 excluded
+        self._free = list(range(num_pages - 1, 0, -1))
+        self.block_tables = np.zeros((max_requests, self.max_blocks), np.int32)
+        self.lengths = np.zeros((max_requests,), np.int64)
+        self.active = np.zeros((max_requests,), bool)
+
+    # ------------------------------------------------------------ allocator
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return uniform_page_count(n_tokens, self.page_size)
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return (not self.active.all()
+                and self.pages_for(prompt_len) <= len(self._free)
+                and self.pages_for(prompt_len) <= self.max_blocks)
+
+    def admit(self, prompt_len: int, reserve_tokens: int | None = None) -> int:
+        """Reserve a slot row + the prompt's pages; returns the slot index.
+        Capacity is checked BEFORE any state changes, so a failed admit
+        leaks nothing.
+
+        ``reserve_tokens`` reserves pages for MORE than the prompt up front
+        (typically prompt + max_new_tokens — the scheduler's worst-case
+        admission control): a request admitted this way can never hit an
+        exhausted pool mid-decode, because concurrent lazy growers can
+        otherwise deadlock each other one page short of finishing."""
+        if prompt_len < 1:
+            raise ValueError("cannot admit an empty prompt")
+        free_slots = np.flatnonzero(~self.active)
+        if free_slots.size == 0:
+            raise PoolExhaustedError(
+                f"no free request slots (all {self.max_requests} active)")
+        need = self.pages_for(max(prompt_len, reserve_tokens or 0))
+        if need > self.max_blocks:
+            raise PoolExhaustedError(
+                f"prompt needs {need} pages > max_blocks {self.max_blocks}")
+        if need > len(self._free):
+            raise PoolExhaustedError(
+                f"KV pool exhausted: prompt needs {need} page(s), "
+                f"{len(self._free)} free of {self.num_pages - 1}")
+        slot = int(free_slots[0])
+        self.active[slot] = True
+        self.lengths[slot] = 0
+        self._grow(slot, need)
+        return slot
+
+    def commit_prefill(self, slot: int, n_tokens: int) -> None:
+        """Record that the prompt's ``n_tokens`` were written by a prefill —
+        pages were already reserved by ``admit``, this only sets the length
+        (callers must not poke ``lengths`` directly; the decode path's
+        ``append`` arithmetic builds on it)."""
+        assert self.active[slot], f"slot {slot} is not active"
+        assert self.lengths[slot] == 0, f"slot {slot} already prefilled"
+        self._grow(slot, self.pages_for(n_tokens))  # no-op unless under-admitted
+        self.lengths[slot] = n_tokens
+
+    def append(self, slot: int, n_tokens: int = 1) -> None:
+        """Account ``n_tokens`` about to be written to ``slot``, allocating a
+        new page when the length crosses a page boundary."""
+        assert self.active[slot], f"slot {slot} is not active"
+        new_len = int(self.lengths[slot]) + n_tokens
+        self._grow(slot, self.pages_for(new_len))
+        self.lengths[slot] = new_len
+
+    def _grow(self, slot: int, want_pages: int) -> None:
+        have = int(np.count_nonzero(self.block_tables[slot]))
+        if want_pages > self.max_blocks:
+            raise PoolExhaustedError(
+                f"request needs {want_pages} pages > max_blocks "
+                f"{self.max_blocks} (max_seq_len too small)")
+        need = want_pages - have
+        if need > len(self._free):
+            raise PoolExhaustedError(
+                f"KV pool exhausted: slot {slot} needs {need} more "
+                f"page(s), {len(self._free)} free of {self.num_pages - 1}")
+        for b in range(have, want_pages):
+            self.block_tables[slot, b] = self._free.pop()
+
+    def free(self, slot: int) -> None:
+        """Return a finished request's pages (LIFO) and scrub their stored
+        positions on device so a reusing request can never attend stale
+        tokens (the paged analogue of a fresh dense-cache init)."""
+        assert self.active[slot], f"slot {slot} is not active"
+        pages = [int(p) for p in self.block_tables[slot] if p != TRASH_PAGE]
+        if pages:
+            idx = jnp.asarray(pages, jnp.int32)
+            self._caches = tuple(
+                dataclasses.replace(c, pos=c.pos.at[:, idx].set(-1))
+                for c in self._caches)
+            self._free.extend(reversed(pages))
+        self.block_tables[slot] = TRASH_PAGE
+        self.lengths[slot] = 0
+        self.active[slot] = False
+
+    # ------------------------------------------------------- device plumbing
+
+    def device_caches(self, rows=None) -> tuple:
+        """The pool pytree with the CURRENT block tables installed —
+        ``rows`` selects a sub-batch (e.g. the freshly admitted requests for
+        a ragged prefill); default is every slot row."""
+        bt = self.block_tables if rows is None else self.block_tables[rows]
+        bt = jnp.broadcast_to(jnp.asarray(bt, jnp.int32)[None],
+                              (self.nb,) + bt.shape)
+        return tuple(dataclasses.replace(c, block_table=bt)
+                     for c in self._caches)
+
+    def update_from(self, new_caches: tuple) -> None:
+        """Adopt the pool arrays a jitted prefill/decode step returned (the
+        block tables riding in the pytree are per-call views; the host copy
+        stays authoritative)."""
+        for c in new_caches:
+            if c.k.shape[-2] != self.page_size:
+                raise ValueError(
+                    f"non-uniform page size: pool pages are {self.page_size} "
+                    f"tokens, got {c.k.shape[-2]}; pages must be uniform — "
+                    f"round lengths with padded_cache_len(s, "
+                    f"{self.page_size}, uniform=True) before paging")
+        self._caches = tuple(
+            dataclasses.replace(c, block_table=old.block_table)
+            for c, old in zip(new_caches, self._caches))
+
+    def gather_dense(self, slot: int) -> tuple:
+        """Reassemble ``slot``'s cache densely from its pages (tests/debug):
+        returns (k_codes, k_scale, v_codes, v_scale, pos) with leading nb."""
+        from repro.kernels.ref import gather_pages_ref
+
+        bt = jnp.asarray(self.block_tables[slot][None], jnp.int32)  # (1, mb)
+        outs = []
+        for c in self._caches:
+            leaves = []
+            for leaf in (c.k, c.v, c.k_scale, c.v_scale, c.pos):
+                g = jnp.stack([gather_pages_ref(leaf[i], bt)[0]
+                               for i in range(self.nb)])
+                leaves.append(g)
+            outs.append(tuple(leaves))
+        return tuple(outs)
+
+    # ----------------------------------------------------------- accounting
+
+    def page_bytes(self) -> int:
+        """Device bytes of ONE page across every covered layer."""
+        kh, hd, ps = self.kv_heads, self.head_dim, self.page_size
+        per_layer = 2 * kh * ps * hd * 1 + 2 * kh * ps * 4 + ps * 4
+        return per_layer * self.num_layers
+
+    def page_bytes_in_use(self) -> int:
+        """Page-granular occupancy: what the allocated pages actually hold
+        (internal fragmentation AND worst-case reservation included)."""
+        return self.pages_in_use * self.page_bytes()
+
+    def page_bytes_written(self) -> int:
+        """Page-granular bytes of pages that hold at least one token —
+        what a page-level KV shipment actually has to move (reserved-but-
+        empty pages excluded, unlike :meth:`page_bytes_in_use`)."""
+        return self.page_bytes() * sum(
+            self.pages_for(int(self.lengths[slot]))
+            for slot in np.flatnonzero(self.active) if self.lengths[slot] > 0)
+
+    def eq2_bytes(self, qa_bits: int = 8) -> int:
+        """The paper's analytical B_kv (Eq. 2 via ``core.opsc.
+        kv_cache_bytes``) summed over resident requests at the pool's int8
+        activation width — the quantity the OPSC optimizer constrains.
+        ``page_bytes_in_use() - eq2_bytes()``-ish gap = paging overhead."""
+        from repro.core.opsc import kv_cache_bytes
+
+        total = 0
+        for slot in np.flatnonzero(self.active):
+            w = int(self.lengths[slot])
+            if w > 0:
+                total += kv_cache_bytes(w, self.num_layers, self.num_layers,
+                                        self.kv_heads * self.head_dim,
+                                        qa_bits, qa_bits)
+        return total
+
+    def occupancy(self) -> float:
+        """Fraction of allocatable pages currently in use."""
+        return self.pages_in_use / max(1, self.num_pages - 1)

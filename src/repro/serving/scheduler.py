@@ -1,0 +1,255 @@
+"""Continuous-batching scheduler over the paged KV pool.
+
+Replaces ``Engine``'s equal-length bucketing: requests of RAGGED prompt and
+generation lengths share one decode batch and one KV pool, and the batch
+composition changes mid-stream — a finished request's slot and pages are
+reclaimed and handed to the next queued request without draining the batch.
+
+Lifecycle per request (see ``serving/README.md``):
+
+  admit   — the queue head is admitted when a slot row AND its worst-case
+            pages (prompt + max_new_tokens) are free — admission control
+            against the Eq. 2 ceiling (``PagedKVPool.admit`` with
+            ``reserve_tokens``; reserving up front is what makes mid-decode
+            exhaustion impossible). Admission is batched, so several
+            waiting requests prefill together
+  prefill — the admitted group prefills RAGGEDLY: right-aligned padding,
+            per-row position masks, one ``paged_prefill`` call whose last
+            column yields every row's first sampled token
+  decode  — ALL active slots step together through ONE jitted
+            ``paged_decode_step`` (fixed slot-count shape → a single
+            compile, whatever the batch mix); each row decodes at its own
+            absolute position, inactive rows ride along masked
+  evict   — on max-tokens or EOS the slot's pages return to the free list
+            (positions scrubbed device-side) and the next admit reuses them
+
+The decode loop is host-orchestrated (greedy argmax on host): what this
+scheduler buys is MEMORY — residency is bounded by the worst case
+(prompt + max_new) of the requests CURRENTLY resident, reclaimed the tick
+each finishes, instead of slots × an engine-wide ``cache_len`` held for the
+whole batch — and admission latency, not per-step dispatch. The fused
+single-batch scan in ``serving.engine`` remains the static-batch fast
+path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import (RuntimeOpts, paged_decode_step,
+                                      paged_prefill)
+from repro.serving.kv_pool import DEFAULT_PAGE_SIZE, PagedKVPool
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class _SlotState:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: int | None
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and self.generated
+                and self.generated[-1] == self.eos_id)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    steps: int = 0  # ragged decode steps executed
+    prefills: int = 0  # ragged prefill calls (≈ admission waves)
+    admitted: int = 0
+    evicted: int = 0
+    peak_occupancy: float = 0.0
+    peak_pool_bytes: int = 0
+    peak_eq2_bytes: int = 0
+
+
+def _bucket(n: int) -> int:
+    """Next power of two — bounds the distinct (R_adm, S_pad) prefill
+    compiles the same way Engine buckets its scan length."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class Scheduler:
+    """Continuous-batching front end over one shared ``PagedKVPool``.
+
+    ``submit`` enqueues; ``run`` drains queue + batch; ``step`` advances one
+    admit→prefill→decode→evict tick for incremental/streaming use."""
+
+    def __init__(self, cfg: ArchConfig, params,
+                 opts: RuntimeOpts = RuntimeOpts(),
+                 *, num_pages: int = 128, page_size: int = DEFAULT_PAGE_SIZE,
+                 max_slots: int = 4, max_seq_len: int | None = None):
+        self.cfg, self.params, self.opts = cfg, params, opts
+        self.pool = PagedKVPool(cfg, num_pages=num_pages, page_size=page_size,
+                                max_requests=max_slots, max_seq_len=max_seq_len)
+        self.max_slots = max_slots
+        self.queue: deque = deque()
+        self.slots: list = [None] * max_slots
+        self.results: dict = {}
+        self.stats = SchedulerStats()
+        self._next_rid = 0
+        self._prefill = jax.jit(
+            lambda params, tokens, caches, positions: paged_prefill(
+                params, cfg, tokens, caches, positions, opts))
+        self._decode = jax.jit(
+            lambda params, tokens, caches, pos: paged_decode_step(
+                params, cfg, tokens, caches, pos, opts))
+
+    # -------------------------------------------------------------- intake
+
+    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None
+               ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size >= 1 and max_new_tokens >= 1
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new_tokens, eos_id))
+        return rid
+
+    # ------------------------------------------------------------ lifecycle
+
+    def _admit_wave(self) -> list:
+        """Admit queue heads while a slot row and their WORST-CASE pages
+        (prompt + max_new_tokens) fit — admission control against the Eq. 2
+        ceiling. Reserving up front means a mid-decode append can never hit
+        an exhausted pool (concurrent lazy growers can deadlock each other
+        one page short); the queue, not an exception, is the backpressure.
+        FIFO: a too-big head blocks the queue (no starvation-prone
+        skipping)."""
+        admitted = []
+        while self.queue:
+            req = self.queue[0]
+            worst = len(req.prompt) + req.max_new_tokens
+            if not self.pool.can_admit(worst):
+                break
+            slot = self.pool.admit(len(req.prompt), reserve_tokens=worst)
+            self.queue.popleft()
+            self.slots[slot] = _SlotState(req.rid, req.prompt,
+                                          req.max_new_tokens, req.eos_id)
+            admitted.append(slot)
+        return admitted
+
+    def _prefill_wave(self, admitted: list) -> None:
+        """One ragged right-aligned prefill over the admitted rows; the last
+        column is every row's final prompt token → first sampled token."""
+        lens = [len(self.slots[s].prompt) for s in admitted]
+        s_pad = _bucket(max(lens))
+        r = len(admitted)
+        tokens = np.zeros((r, s_pad), np.int32)
+        posn = np.full((r, s_pad), -1, np.int32)
+        for i, slot in enumerate(admitted):
+            p = self.slots[slot].prompt
+            tokens[i, s_pad - p.size:] = p
+            posn[i, s_pad - p.size:] = np.arange(p.size)
+        logits, new_caches = self._prefill(
+            self.params, jnp.asarray(tokens),
+            caches=self.pool.device_caches(rows=admitted),
+            positions=jnp.asarray(posn))
+        self.pool.update_from(new_caches)
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, slot in enumerate(admitted):
+            self.pool.commit_prefill(slot, lens[i])
+            self.slots[slot].generated.append(int(first[i]))
+        self.stats.prefills += 1
+        self.stats.admitted += r
+
+    def _decode_tick(self) -> None:
+        """One ragged decode step over EVERY slot (single compiled shape);
+        inactive rows carry position -1 and are masked end-to-end."""
+        tokens = np.zeros((self.max_slots, 1), np.int32)
+        pos = np.full((self.max_slots,), -1, np.int32)
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            tokens[i, 0] = st.generated[-1]
+            pos[i] = self.pool.lengths[i]  # absolute position being written
+            self.pool.append(i, 1)
+        logits, new_caches = self._decode(
+            self.params, jnp.asarray(tokens),
+            caches=self.pool.device_caches(), pos=jnp.asarray(pos))
+        self.pool.update_from(new_caches)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, st in enumerate(self.slots):
+            if st is not None:
+                st.generated.append(int(nxt[i]))
+        self.stats.steps += 1
+
+    def _evict_finished(self) -> None:
+        for i, st in enumerate(self.slots):
+            if st is None or not st.done:
+                continue
+            toks = st.generated[: st.max_new_tokens]
+            if st.eos_id is not None and st.eos_id in toks:
+                toks = toks[: toks.index(st.eos_id) + 1]
+            self.results[st.rid] = np.concatenate(
+                [st.prompt, np.asarray(toks, np.int32)])
+            self.pool.free(i)
+            self.slots[i] = None
+            self.stats.evicted += 1
+
+    def _track_occupancy(self) -> None:
+        self.stats.peak_occupancy = max(self.stats.peak_occupancy,
+                                        self.pool.occupancy())
+        self.stats.peak_pool_bytes = max(self.stats.peak_pool_bytes,
+                                         self.pool.page_bytes_in_use())
+        self.stats.peak_eq2_bytes = max(self.stats.peak_eq2_bytes,
+                                        self.pool.eq2_bytes())
+
+    # ------------------------------------------------------------- driving
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def step(self) -> bool:
+        """One scheduler tick: admit+prefill a wave, evict anything that
+        finished on its prefill token, decode the ragged batch, evict.
+        Returns whether work remains."""
+        admitted = self._admit_wave()
+        if admitted:
+            self._prefill_wave(admitted)
+            self._track_occupancy()
+            self._evict_finished()  # max_new_tokens == 1 finishes here
+        if any(s is not None for s in self.slots):
+            self._decode_tick()
+            self._track_occupancy()
+            self._evict_finished()
+        elif not admitted and self.queue:
+            # idle pool yet the head still doesn't fit: it never will —
+            # fail loudly instead of spinning forever
+            req = self.queue[0]
+            from repro.serving.kv_pool import PoolExhaustedError
+
+            raise PoolExhaustedError(
+                f"request {req.rid} needs "
+                f"{self.pool.pages_for(len(req.prompt) + req.max_new_tokens)}"
+                f" pages worst-case but the whole pool has "
+                f"{self.pool.num_pages - 1} (max_blocks "
+                f"{self.pool.max_blocks}); it can never be admitted")
+        return self.pending
+
+    def run(self) -> dict:
+        """Drain queue and batch; returns {rid: np.ndarray tokens} (prompt +
+        generation, EOS-truncated)."""
+        while self.step():
+            pass
+        return self.results

@@ -66,6 +66,13 @@ class SplitStats:
     latency_s: float = 0.0
     early_exits: int = 0
     kv_dropped_steps: int = 0
+    # paged-cloud accounting (paged_cloud_kv=True, I_kv=1): the per-step KV
+    # shipment at PAGE granularity, following the SAME full-cache-per-step
+    # convention as uplink_bits_eq3 (Eq. 3 ships B_kv(w) every step — this
+    # is its page-granular int8 analogue, directly comparable), plus the
+    # pool's peak residency (Eq. 2's cloud-side term, reservation included)
+    uplink_bits_paged: float = 0.0
+    cloud_pool_bytes_peak: int = 0
 
 
 class SplitEngine:
@@ -74,11 +81,21 @@ class SplitEngine:
                  deadline_s: float | None = None,
                  compute_per_layer_s: float = 1e-4,
                  opts: RuntimeOpts = RuntimeOpts(remat=False),
-                 cache_len: int = 4096):
+                 cache_len: int = 4096,
+                 paged_cloud_kv: bool = False,
+                 cloud_pool_pages: int = 256,
+                 cloud_page_size: int | None = None):
         assert opsc.split_layer % len(cfg.pattern) == 0, \
             "split point must fall on a pattern boundary"
         self.cfg, self.opts, self.opsc = cfg, opts, opsc
         self.cache_len = cache_len
+        # I_kv=1 with a paged cloud: the per-step KV shipment and the cloud's
+        # resident memory are accounted at PAGE granularity from a shared
+        # pool (serving.kv_pool) instead of a dense per-request cache — the
+        # multi-tenant cloud serves many edges from one Eq. 2 budget
+        self.paged_cloud_kv = paged_cloud_kv
+        self.cloud_pool_pages = cloud_pool_pages
+        self.cloud_page_size = cloud_page_size
         self.split_block = opsc.split_layer // len(cfg.pattern)
         nb = cfg.num_blocks
 
@@ -172,8 +189,32 @@ class SplitEngine:
         nfront, nback = self.split_block, cfg.num_blocks - self.split_block
         edge_caches = jax.tree_util.tree_map(
             lambda a: a[:nfront], init_caches(cfg, b, self.cache_len, opts))
-        cloud_caches = jax.tree_util.tree_map(
-            lambda a: a[nfront:], init_caches(cfg, b, self.cache_len, opts))
+        cloud_pool = None
+        if self.paged_cloud_kv and self.opsc.i_kv:
+            from repro.serving.kv_pool import (DEFAULT_PAGE_SIZE, PagedKVPool)
+
+            cloud_pool = PagedKVPool(
+                cfg, num_pages=self.cloud_pool_pages,
+                page_size=self.cloud_page_size or DEFAULT_PAGE_SIZE,
+                max_requests=b, max_seq_len=self.cache_len, num_blocks=nback)
+            for _ in range(b):
+                # worst-case reservation (like the scheduler's admission
+                # control): a mid-decode append can then never exhaust the
+                # pool and lose the generated tokens
+                cloud_pool.admit(s, reserve_tokens=s + max_new_tokens)
+            cloud_caches = cloud_pool.device_caches()
+        else:
+            cloud_caches = jax.tree_util.tree_map(
+                lambda a: a[nfront:], init_caches(cfg, b, self.cache_len, opts))
+
+        def account_pages():
+            if cloud_pool is None:
+                return
+            # shipment moves the WRITTEN pages; residency counts the whole
+            # worst-case reservation the cloud is holding
+            stats.uplink_bits_paged += cloud_pool.page_bytes_written() * 8
+            stats.cloud_pool_bytes_peak = max(stats.cloud_pool_bytes_peak,
+                                              cloud_pool.page_bytes_in_use())
 
         # ---- prefill both segments (prompt flows through the same uplink)
         h, edge_caches = self._edge_front(self.edge_params["blocks"],
@@ -188,6 +229,11 @@ class SplitEngine:
                                                 self.cloud_params, h, cloud_caches,
                                                 jnp.int32(0), decode=False)
         stats.uplink_bits_eq3 += self._eq3_bits(s, self.opsc.i_kv)
+        if cloud_pool is not None:
+            cloud_pool.update_from(cloud_caches)
+            for r in range(b):
+                cloud_pool.commit_prefill(r, s)
+            account_pages()
 
         # Preallocated device buffers (no unbounded Python-list concat, no
         # per-token host copy): split-layer history for the stateless-cloud
@@ -234,9 +280,16 @@ class SplitEngine:
             h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
             n_hist += 1
             if i_kv:
+                if cloud_pool is not None:  # grow each request by one slot
+                    for r in range(b):
+                        cloud_pool.append(r, 1)
+                    cloud_caches = cloud_pool.device_caches()
                 logits, cloud_caches = self._cloud_back(
                     self.cloud_params["blocks"], self.cloud_params, h_c,
                     cloud_caches, jnp.int32(pos), decode=True)
+                if cloud_pool is not None:
+                    cloud_pool.update_from(cloud_caches)
+                    account_pages()
             else:
                 # stateless cloud: re-run the back segment over the history
                 # (the paper's "losing the benefits of the cache")

@@ -110,3 +110,46 @@ def test_split_engine_compression_shrinks_uplink(tiny_model):
     _, raw = split.generate(prompts, 5, compress=False)
     _, comp = split.generate(prompts, 5, compress=True)
     assert comp.uplink_bits_measured < raw.uplink_bits_measured / 2
+
+
+def test_split_engine_paged_cloud_matches_dense(tiny_model):
+    """I_kv=1 with a paged cloud pool: the cloud decodes from shipped PAGES
+    (kernels.paged_decode_attention over a kv_pool) — same greedy tokens as
+    the dense cloud cache, with page-granular uplink/memory accounting."""
+    cfg, params = tiny_model
+    opsc = OPSCConfig(split_layer=1, qw_front=16, i_kv=1)
+    dense = SplitEngine(cfg, params, opsc, opts=OPTS, cache_len=64)
+    paged = SplitEngine(cfg, params, opsc, opts=OPTS, cache_len=64,
+                        paged_cloud_kv=True, cloud_pool_pages=32,
+                        cloud_page_size=8)
+    prompts = np.random.default_rng(7).integers(0, cfg.vocab_size, (2, 8))
+    t_dense, _ = dense.generate(prompts, 5, compress=False)
+    t_paged, st = paged.generate(prompts, 5, compress=False)
+    np.testing.assert_array_equal(t_paged, t_dense)
+    assert st.uplink_bits_paged > 0
+    assert st.cloud_pool_bytes_peak > 0
+    # page-granular shipment ≤ the dense Eq. 3 accounting at fp16 widths —
+    # the pool ships int8 codes + scales in whole pages
+    assert st.cloud_pool_bytes_peak * 8 <= st.uplink_bits_eq3
+
+
+# ------------------------------------------------ engine compile-cache key
+
+
+def test_engine_generate_fn_keys_on_cache_len(tiny_model):
+    """Regression: the fused-loop compile cache must key on cache_len (the
+    closure bakes it in) — reconfiguring a live engine previously reused the
+    stale closure and silently kept the old cache size."""
+    cfg, params = tiny_model
+    eng = Engine(cfg, params, OPTS, cache_len=64)
+    fn64 = eng.generate_fn(4, greedy=True)
+    assert eng.generate_fn(4, greedy=True) is fn64  # same config → cached
+    eng.cache_len = 32
+    fn32 = eng.generate_fn(4, greedy=True)
+    assert fn32 is not fn64  # new cache size → new closure, not stale reuse
+    prompts = np.random.default_rng(8).integers(0, cfg.vocab_size, (2, 8))
+    out = eng.generate(prompts, 4).tokens  # and it actually serves
+    assert out.shape == (2, 12)
+    # opts changes key too (they alter the traced computation)
+    eng.opts = dataclasses.replace(OPTS, quantized_kv=True)
+    assert eng.generate_fn(4, greedy=True) is not fn32
