@@ -17,11 +17,13 @@ import time
 def _registry():
     from benchmarks import paper_benchmarks as pb
     from benchmarks.decode_path import bench_decode_path
+    from benchmarks.prefix_sharing import bench_prefix_sharing
     from benchmarks.ragged_batch import bench_ragged_batch
     from benchmarks.roofline_report import bench_roofline
 
     return {
         "decode_path": bench_decode_path,
+        "prefix_sharing": bench_prefix_sharing,
         "ragged_batch": bench_ragged_batch,
         "fig5": pb.bench_fig5_server_scaling,
         "fig6": pb.bench_fig6_payload_size,

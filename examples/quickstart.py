@@ -1,7 +1,10 @@
 """Quickstart: train a tiny LM on the synthetic Zipf–Markov corpus, then
 serve it with the batched engine.
 
-  PYTHONPATH=src python examples/quickstart.py [--steps 150]
+  PYTHONPATH=src python examples/quickstart.py [--steps 150] [--smoke]
+
+``--smoke`` shrinks the run (25 steps, short generations) — the CI
+docs-check job executes it to prove the README's quickstart command works.
 """
 
 import argparse
@@ -23,7 +26,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--arch", default="llama2-7b")  # tiny variant is used
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken CI run (docs-check job)")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 25)
 
     cfg = dataclasses.replace(get_config(args.arch).tiny(), vocab_size=128)
     opts = RuntimeOpts(q_chunk=64, kv_chunk=64, remat=False,
@@ -40,7 +47,7 @@ def main():
     engine = Engine(cfg, params, opts, cache_len=128)
     rng = np.random.default_rng(0)
     prompts = corpus.sample(rng, batch=4, seq=16).astype(np.int32)
-    result = engine.generate(prompts, max_new_tokens=24)
+    result = engine.generate(prompts, max_new_tokens=8 if args.smoke else 24)
     print("[quickstart] generated continuations:")
     for row in result.tokens:
         print("  ", row[:16].tolist(), "→", row[16:].tolist())

@@ -81,6 +81,33 @@ def kv_cache_bytes(w: int, ell: int, num_layers: int, heads_dim: int,
     return bits // 8
 
 
+def kv_cache_bytes_shared(w_prefix: int, request_ws, ell: int,
+                          num_layers: int, heads_dim: int,
+                          qa_front: int, qa_back: int) -> int:
+    """Eq. (2) under PREFIX SHARING  [bytes].
+
+    ``request_ws`` are the TOTAL lengths w_r (prefix + suffix + generated)
+    of the requests sharing a ``w_prefix``-token materialized prompt
+    prefix. The prefix's cache is resident ONCE; each request adds only its
+    marginal suffix bytes::
+
+        B_kv_shared = B_kv(w_prefix) + Σ_r [ B_kv(w_r) - B_kv(w_prefix) ]
+
+    (B_kv affine in w makes the marginal exactly the suffix tokens' bytes.)
+    This is the analytical counterpart of ``serving.kv_pool``'s refcounted
+    pages — what the per-request Eq. (2) sum over-counts under sharing is
+    ``(N-1) · B_kv(w_prefix)``, the multi-tenant memory win."""
+    base = kv_cache_bytes(w_prefix, ell, num_layers, heads_dim,
+                          qa_front, qa_back) if w_prefix > 0 else 0
+    total = base
+    for w in request_ws:
+        if w < w_prefix:
+            raise ValueError(f"request length {w} < shared prefix {w_prefix}")
+        total += kv_cache_bytes(w, ell, num_layers, heads_dim,
+                                qa_front, qa_back) - base
+    return total
+
+
 def ssm_state_bytes(num_ssm_layers: int, state_elems: int, qa_bits: int) -> int:
     """Degenerate Eq. (2) for SSM/hybrid layers: the 'cache' is a fixed-size
     recurrent state (constant in w) — see DESIGN.md §Arch-applicability."""

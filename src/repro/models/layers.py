@@ -448,6 +448,56 @@ def quantized_decode_attention(q, cache: KVCache, spec, q_positions, pos, *,
                              q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
+def _gather_dense_kv(cache: PagedKVCache):
+    """Gather a paged cache dense via its block table and dequantize:
+    (k, v) (R, S_pool, K, hd) f32 token-major + kv_pos (R, S_pool)."""
+    from repro.kernels.ref import gather_pages_ref
+
+    kd = gather_pages_ref(cache.k, cache.block_table)  # (R, K, Sp, hd)
+    vd = gather_pages_ref(cache.v, cache.block_table)
+    ks = gather_pages_ref(cache.k_scale, cache.block_table)
+    vs = gather_pages_ref(cache.v_scale, cache.block_table)
+    kv_pos = gather_pages_ref(cache.pos, cache.block_table)  # (R, Sp)
+    k = jnp.swapaxes(kd.astype(jnp.float32) * ks[..., None], 1, 2)
+    v = jnp.swapaxes(vd.astype(jnp.float32) * vs[..., None], 1, 2)
+    return k, v, kv_pos
+
+
+def paged_prefill_attention(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
+                            q_positions, *, q_chunk=1024, kv_chunk=1024):
+    """Prefill attention THROUGH the paged pool — the shared-prefix entry.
+
+    A plain prefill attends only the call's fresh k/v; a request forked from
+    a shared prefix additionally owns block-table pages holding tokens
+    written BEFORE this call (the prefix). Each row attends the union of
+
+      * its gathered pool history, masked to stored positions < the row's
+        FIRST in-call position (so tokens this very call scatters into the
+        pool are not double-counted, and a row prefilling from position 0
+        sees no history at all), dequantized from int8 — exactly what its
+        decode steps will read; and
+      * the call's fresh keys/values at full precision, masked causally by
+        ``q_positions`` like the plain ragged prefill.
+
+    ``cache`` must be the post-update pool (this call's tokens already
+    scattered), so rows created in the SAME call can serve as each other's
+    prefix — the split engine prefills the prefix owner and its forks in
+    one batched call. Correct-not-fast: the history is gathered dense via
+    the block table (like the softcap fallback); the Pallas page walk stays
+    decode-only."""
+    k_hist, v_hist, hist_pos = _gather_dense_kv(cache)
+    start = jnp.min(jnp.where(q_positions >= 0, q_positions, jnp.int32(2**30)),
+                    axis=1)  # (R,) first in-call position per row
+    hist_pos = jnp.where(hist_pos < start[:, None], hist_pos, -1)
+    k = jnp.concatenate([k_hist, k_fresh.astype(jnp.float32)], axis=1)
+    v = jnp.concatenate([v_hist, v_fresh.astype(jnp.float32)], axis=1)
+    kv_pos = jnp.concatenate([hist_pos, q_positions], axis=1)
+    return chunked_attention(q, k, v, q_positions, kv_pos, causal=True,
+                             window=spec.sliding_window,
+                             softcap=spec.attn_softcap,
+                             q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
 def paged_decode_attention_layer(q, cache: PagedKVCache, spec, q_positions, *,
                                  q_chunk=1024, kv_chunk=1024):
     """Decode-time attention through the PAGED pool.
@@ -472,15 +522,7 @@ def paged_decode_attention_layer(q, cache: PagedKVCache, spec, q_positions, *,
                                      cache.v_scale, cache.pos,
                                      cache.block_table, q_pos)
         return out.reshape(b, 1, h, hd).astype(q.dtype)
-    from repro.kernels.ref import gather_pages_ref
-
-    kd = gather_pages_ref(cache.k, cache.block_table)  # (R, K, S_pool, hd)
-    vd = gather_pages_ref(cache.v, cache.block_table)
-    ks = gather_pages_ref(cache.k_scale, cache.block_table)
-    vs = gather_pages_ref(cache.v_scale, cache.block_table)
-    kv_pos = gather_pages_ref(cache.pos, cache.block_table)
-    k = jnp.swapaxes(kd.astype(jnp.float32) * ks[..., None], 1, 2)
-    v = jnp.swapaxes(vd.astype(jnp.float32) * vs[..., None], 1, 2)
+    k, v, kv_pos = _gather_dense_kv(cache)
     return chunked_attention(q, k, v, q_positions, kv_pos, causal=True,
                              window=spec.sliding_window,
                              softcap=spec.attn_softcap,
@@ -511,7 +553,7 @@ def init_attention_params(key, d_model: int, num_heads: int, num_kv_heads: int,
 
 def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | None,
                     pos, q_positions, q_chunk=1024, kv_chunk=1024,
-                    decode: bool = False):
+                    decode: bool = False, attend_cache: bool = False):
     """One attention layer.
 
     ``rope_cs``: (cos, sin) tables for the query positions, or None.
@@ -519,7 +561,10 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
     prefill the cache is *written* but attention runs over the fresh k/v
     (a window-sized ring cache cannot serve early queries their own window;
     chunked multi-segment prefill is not used by this framework). Only
-    ``decode=True`` attends through the cache. Returns (output, new_cache)."""
+    ``decode=True`` attends through the cache — except ``attend_cache=True``
+    on a paged cache, which prefills THROUGH the pool (shared-prefix
+    suffix prefill: history pages + fresh k/v, see
+    :func:`paged_prefill_attention`). Returns (output, new_cache)."""
     b, s, d = x.shape
     h, kh, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
     q = (x @ params["wq"]).reshape(b, s, h, hd)
@@ -554,6 +599,9 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
                 q, new_cache.k, new_cache.v, q_positions, new_cache.pos,
                 causal=True, window=spec.sliding_window,
                 softcap=spec.attn_softcap, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    elif attend_cache and isinstance(new_cache, PagedKVCache):
+        out = paged_prefill_attention(q, new_cache, k, v, spec, q_positions,
+                                      q_chunk=q_chunk, kv_chunk=kv_chunk)
     else:
         out = chunked_attention(
             q, k, v, q_positions, q_positions,

@@ -195,14 +195,14 @@ def apply_head(cfg: ArchConfig, params, x):
 
 
 def _apply_layer(cfg, ls: LayerSpec, p, x, *, rope_cs, q_positions, cache, pos,
-                 opts: RuntimeOpts, decode: bool):
+                 opts: RuntimeOpts, decode: bool, attend_cache: bool = False):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
     if isinstance(ls.mixer, AttnSpec):
         out, new_cache = L.attention_layer(
             p["mixer"], h, ls.mixer, rope_cs=rope_cs, cache=cache, pos=pos,
             q_positions=q_positions, q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
-            decode=decode)
+            decode=decode, attend_cache=attend_cache)
     else:
         conv_state, ssm_state = cache if cache is not None else (None, None)
         out, new_cache = ssm_layer(p["mixer"], h, ls.mixer,
@@ -256,7 +256,8 @@ def _apply_blocks_train(cfg, blocks, x, *, rope_cs, q_positions, opts: RuntimeOp
 
 
 def _apply_blocks_cached(cfg, blocks, x, caches, *, rope_cs, q_positions, pos,
-                         opts: RuntimeOpts, decode: bool):
+                         opts: RuntimeOpts, decode: bool,
+                         attend_cache: bool = False):
     """Caches ride in the scan CARRY (sliced per block by index, written back
     with dynamic_update_slice) rather than as xs→ys: carries can be buffer-
     aliased/donated, so a serve step updates the multi-GB cache in place —
@@ -273,7 +274,7 @@ def _apply_blocks_cached(cfg, blocks, x, caches, *, rope_cs, q_positions, pos,
             x, nc, _ = _apply_layer(cfg, ls, p_slice[f"p{pi}"], x,
                                     rope_cs=rope_cs, q_positions=q_positions,
                                     cache=cache_i, pos=pos, opts=opts,
-                                    decode=decode)
+                                    decode=decode, attend_cache=attend_cache)
             new_caches.append(jax.tree_util.tree_map(
                 lambda full, sl: jax.lax.dynamic_update_slice_in_dim(
                     full, sl[None].astype(full.dtype), i, axis=0),
@@ -398,6 +399,31 @@ def paged_prefill(params, cfg: ArchConfig, tokens, caches, positions,
     x, caches = _apply_blocks_cached(cfg, params["blocks"], x, caches,
                                      rope_cs=rope_cs, q_positions=positions,
                                      pos=jnp.int32(0), opts=opts, decode=False)
+    logits = apply_head(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def paged_prefill_shared(params, cfg: ArchConfig, tokens, caches, positions,
+                         opts: RuntimeOpts = RuntimeOpts()):
+    """Ragged prefill THROUGH the paged pool — the shared-prefix entry point.
+
+    Same calling convention as :func:`paged_prefill` (right-aligned
+    ``tokens``/``positions`` (R, S), ``-1`` pads, last column = each row's
+    final prompt token), but rows may start at a position > 0: a row forked
+    from a shared prefix passes only its SUFFIX tokens with absolute
+    positions ``[prefix_len, prompt_len)``, and its attention additionally
+    reads the prefix tokens already stored in its block-table pages
+    (``models.layers.paged_prefill_attention`` — history masked to stored
+    positions below the row's first in-call position, so the suffix
+    attends exactly prefix + itself). Rows starting at position 0 behave
+    like the plain ragged prefill. Returns (last_logits (R, V), caches)."""
+    positions = jnp.asarray(positions, jnp.int32)
+    x = embed_inputs(cfg, params, tokens, None, jnp.maximum(positions, 0))
+    rope_cs = rope_tables(cfg, positions)
+    x, caches = _apply_blocks_cached(cfg, params["blocks"], x, caches,
+                                     rope_cs=rope_cs, q_positions=positions,
+                                     pos=jnp.int32(0), opts=opts, decode=False,
+                                     attend_cache=True)
     logits = apply_head(cfg, params, x[:, -1:])
     return logits[:, 0], caches
 

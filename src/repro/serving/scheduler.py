@@ -1,4 +1,5 @@
-"""Continuous-batching scheduler over the paged KV pool.
+"""Continuous-batching scheduler over the paged KV pool: prefix sharing,
+preemption, lazy page growth.
 
 Replaces ``Engine``'s equal-length bucketing: requests of RAGGED prompt and
 generation lengths share one decode batch and one KV pool, and the batch
@@ -7,29 +8,64 @@ reclaimed and handed to the next queued request without draining the batch.
 
 Lifecycle per request (see ``serving/README.md``):
 
-  admit   — the queue head is admitted when a slot row AND its worst-case
-            pages (prompt + max_new_tokens) are free — admission control
-            against the Eq. 2 ceiling (``PagedKVPool.admit`` with
-            ``reserve_tokens``; reserving up front is what makes mid-decode
-            exhaustion impossible). Admission is batched, so several
-            waiting requests prefill together
+  admit   — the queue head is admitted when a slot row AND its admission
+            pages are free. Two admission policies:
+              * reserve (default) — pages for the WORST case
+                (prompt + max_new_tokens) are reserved up front, so a
+                mid-decode append can never hit an exhausted pool; the
+                queue, not an exception, is the backpressure
+              * lazy (``lazy_growth=True``) — only the PROMPT's pages are
+                reserved; decode grows page by page and pool exhaustion is
+                resolved by PREEMPTION (below). Strictly higher admitted
+                concurrency from the same pool, at the cost of preemption
+                work under pressure
+            A request submitted with ``prefix_key=`` attaches to the shared
+            prefix instead of allocating its own copy: the first such
+            request (the CREATOR) prefills the full prompt and its prefix
+            pages are pinned as a ``kv_pool.SharedPrefix``; later requests
+            FORK — their block tables alias the pinned pages (refcount +1
+            each) and only suffix pages (plus one CoW boundary copy when
+            the prefix is not page-aligned) are newly allocated
   prefill — the admitted group prefills RAGGEDLY: right-aligned padding,
-            per-row position masks, one ``paged_prefill`` call whose last
-            column yields every row's first sampled token
+            per-row position masks, one call whose last column yields every
+            row's first sampled token. Forked rows prefill ONLY their
+            suffix, attending the shared prefix through their block tables
+            (``models.transformer.paged_prefill_shared``)
   decode  — ALL active slots step together through ONE jitted
             ``paged_decode_step`` (fixed slot-count shape → a single
             compile, whatever the batch mix); each row decodes at its own
             absolute position, inactive rows ride along masked
-  evict   — on max-tokens or EOS the slot's pages return to the free list
-            (positions scrubbed device-side) and the next admit reuses them
+  preempt — (lazy mode) when an append exhausts the pool, idle pinned
+            prefixes are released first; then the lowest-priority (ties:
+            most recently admitted) running request is EVICTED back to the
+            queue head carrying its generated-so-far tokens, its pages
+            freed. Two resume mechanisms (``resume=``):
+              * "swap" (default) — the victim's written pages are
+                snapshotted to HOST memory at eviction and restored
+                bit-identically on re-admission (``kv_pool.export_slot`` /
+                ``restore_slot``): the resumed decode is exactly the
+                un-preempted one, token for token
+              * "refill" — nothing is saved; the resumed request RE-PREFILLS
+                prompt + generated tokens (re-attaching to its shared
+                prefix if it has one). Cheaper in host memory, but the
+                re-prefilled K/V travel a different numeric path than the
+                decode-written originals, so the continuation is only
+                approximately (not bit-) identical
+            Already-emitted tokens are never re-sampled either way. Lazy
+            admission always reserves one token of decode headroom past the
+            (re-)prefill, so every admitted request makes ≥ 1 token of
+            progress before it can be preempted — no livelock
+  evict   — on max-tokens or EOS the slot's page references return to the
+            pool (exclusively-owned pages scrubbed device-side; shared
+            prefix pages survive for the next fork) and the next admit
+            reuses them
 
 The decode loop is host-orchestrated (greedy argmax on host): what this
-scheduler buys is MEMORY — residency is bounded by the worst case
-(prompt + max_new) of the requests CURRENTLY resident, reclaimed the tick
-each finishes, instead of slots × an engine-wide ``cache_len`` held for the
-whole batch — and admission latency, not per-step dispatch. The fused
-single-batch scan in ``serving.engine`` remains the static-batch fast
-path.
+scheduler buys is MEMORY — shared prefixes are resident once however many
+requests attach, residency is bounded by what the CURRENTLY resident
+requests actually use (lazy mode), reclaimed the tick each finishes —
+and admission latency, not per-step dispatch. The fused single-batch scan
+in ``serving.engine`` remains the static-batch fast path.
 """
 
 from __future__ import annotations
@@ -43,43 +79,76 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.transformer import (RuntimeOpts, paged_decode_step,
-                                      paged_prefill)
-from repro.serving.kv_pool import DEFAULT_PAGE_SIZE, PagedKVPool
+                                      paged_prefill, paged_prefill_shared)
+from repro.serving.kv_pool import (DEFAULT_PAGE_SIZE, PagedKVPool,
+                                   PoolExhaustedError, SharedPrefix)
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray  # (S,) int32
+    prompt: np.ndarray  # (S,) int32 — the ORIGINAL prompt tokens
     max_new_tokens: int
     eos_id: int | None = None
+    prefix_key: object = None  # hashable; same key ⇒ shared prompt prefix
+    priority: int = 0  # higher = preempted later
+    # resume state: tokens generated before a preemption — re-seeded into
+    # the slot on re-admission, never re-sampled — and (swap resume) the
+    # host snapshot of the request's written pages
+    generated: list = dataclasses.field(default_factory=list)
+    snapshot: dict | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        """TOKENS a (re-)prefill must write: the prompt plus every generated
+        token already FED to the model (all but the last generated token,
+        which is the next decode input)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated[:-1], np.int32)])
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """Registry row for one shared prompt prefix."""
+
+    key: object
+    tokens: np.ndarray  # (prefix_len,) int32 — validated on every submit
+    handle: SharedPrefix | None = None  # pinned pages once materialized
+    creator_rid: int | None = None  # request whose prefill materializes it
+    forks: int = 0
 
 
 @dataclasses.dataclass
 class _SlotState:
-    rid: int
-    prompt: np.ndarray
-    max_new_tokens: int
-    eos_id: int | None
-    generated: list = dataclasses.field(default_factory=list)
+    req: Request
+    generated: list
+    seq: int  # admission sequence number (preemption tie-break)
 
     @property
     def done(self) -> bool:
-        if len(self.generated) >= self.max_new_tokens:
+        if len(self.generated) >= self.req.max_new_tokens:
             return True
-        return (self.eos_id is not None and self.generated
-                and self.generated[-1] == self.eos_id)
+        return (self.req.eos_id is not None and self.generated
+                and self.generated[-1] == self.req.eos_id)
 
 
 @dataclasses.dataclass
 class SchedulerStats:
     steps: int = 0  # ragged decode steps executed
     prefills: int = 0  # ragged prefill calls (≈ admission waves)
-    admitted: int = 0
-    evicted: int = 0
+    admitted: int = 0  # admissions incl. resumptions
+    evicted: int = 0  # completed requests
+    preemptions: int = 0  # evict-to-queue events (lazy mode)
+    prefix_forks: int = 0  # admissions that attached to a shared prefix
+    slot_ticks: int = 0  # Σ active slots over decode steps (mean concurrency
+    #                       = slot_ticks / steps)
     peak_occupancy: float = 0.0
-    peak_pool_bytes: int = 0
-    peak_eq2_bytes: int = 0
+    peak_pool_bytes: int = 0  # physical page bytes (shared pages once)
+    peak_eq2_bytes: int = 0  # logical per-request Eq. 2 bytes
+    peak_shared_pages: int = 0  # pages with refcount > 1
+    peak_swap_bytes: int = 0  # host bytes held by swapped-out snapshots
 
 
 def _bucket(n: int) -> int:
@@ -92,23 +161,37 @@ class Scheduler:
     """Continuous-batching front end over one shared ``PagedKVPool``.
 
     ``submit`` enqueues; ``run`` drains queue + batch; ``step`` advances one
-    admit→prefill→decode→evict tick for incremental/streaming use."""
+    admit→prefill→decode→evict tick for incremental/streaming use.
+    ``lazy_growth=True`` switches admission control from worst-case page
+    reservation to current-need reservation with preemption on exhaustion
+    (see module doc)."""
 
     def __init__(self, cfg: ArchConfig, params,
                  opts: RuntimeOpts = RuntimeOpts(),
                  *, num_pages: int = 128, page_size: int = DEFAULT_PAGE_SIZE,
-                 max_slots: int = 4, max_seq_len: int | None = None):
+                 max_slots: int = 4, max_seq_len: int | None = None,
+                 lazy_growth: bool = False, resume: str = "swap"):
+        if resume not in ("swap", "refill"):
+            raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
         self.cfg, self.params, self.opts = cfg, params, opts
         self.pool = PagedKVPool(cfg, num_pages=num_pages, page_size=page_size,
                                 max_requests=max_slots, max_seq_len=max_seq_len)
         self.max_slots = max_slots
+        self.lazy_growth = lazy_growth
+        self.resume = resume
+        self._swap_bytes = 0
         self.queue: deque = deque()
         self.slots: list = [None] * max_slots
         self.results: dict = {}
         self.stats = SchedulerStats()
+        self._prefixes: dict = {}
         self._next_rid = 0
+        self._admit_seq = 0
         self._prefill = jax.jit(
             lambda params, tokens, caches, positions: paged_prefill(
+                params, cfg, tokens, caches, positions, opts))
+        self._prefill_shared = jax.jit(
+            lambda params, tokens, caches, positions: paged_prefill_shared(
                 params, cfg, tokens, caches, positions, opts))
         self._decode = jax.jit(
             lambda params, tokens, caches, pos: paged_decode_step(
@@ -116,92 +199,270 @@ class Scheduler:
 
     # -------------------------------------------------------------- intake
 
-    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None
-               ) -> int:
+    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None,
+               *, prefix_key=None, prefix_len: int | None = None,
+               priority: int = 0) -> int:
+        """Enqueue a request; returns its rid.
+
+        ``prefix_key`` (any hashable) declares that this prompt's first
+        ``prefix_len`` TOKENS are shared verbatim with every other request
+        carrying the same key (a system prompt, a beam stem): the prefix is
+        prefilled once and later requests attach to its pages. The key's
+        FIRST submit fixes the shared length (pass ``prefix_len``
+        explicitly there — it defaults to that whole prompt minus one
+        token); later submits inherit the registered length, so they may
+        omit ``prefix_len``. The shared length is capped at
+        ``len(prompt) - 1`` (at least one suffix token must prefill to
+        produce the request's first logits) and must match token-for-token
+        across the key's requests. ``priority`` orders preemption victims
+        in lazy mode (lower evicts first)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 1 and max_new_tokens >= 1
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new_tokens, eos_id))
+        req = Request(rid, prompt, max_new_tokens, eos_id, priority=priority)
+        if prefix_key is not None:
+            entry = self._prefixes.get(prefix_key)
+            if prefix_len is not None:
+                plen = int(prefix_len)
+            elif entry is not None:
+                plen = int(entry.tokens.size)  # inherit the key's length
+            else:
+                plen = prompt.size - 1
+            plen = min(plen, prompt.size - 1)
+            if plen >= 1:
+                if entry is None:
+                    entry = _PrefixEntry(prefix_key, prompt[:plen].copy())
+                    self._prefixes[prefix_key] = entry
+                else:
+                    if entry.tokens.size != plen or not np.array_equal(
+                            entry.tokens, prompt[:plen]):
+                        raise ValueError(
+                            f"prefix_key {prefix_key!r}: request {rid}'s "
+                            f"declared {plen}-token prefix does not match "
+                            f"the registered {entry.tokens.size}-token one")
+                req.prefix_key = prefix_key
+        self.queue.append(req)
         return rid
+
+    def release_prefixes(self) -> None:
+        """Release every pinned shared prefix (their pages return to the
+        free list once the last attached request finishes) and prune
+        registry entries no queued or running request still names — a
+        long-running scheduler must not accumulate one entry per
+        prefix_key ever submitted. ``run`` calls this after draining;
+        streaming users call it when a prefix's tenancy ends."""
+        for entry in self._prefixes.values():
+            if entry.handle is not None:
+                self.pool.release_prefix(entry.handle)
+                entry.handle = None
+                entry.creator_rid = None
+        live = {r.prefix_key for r in self.queue} | {
+            st.req.prefix_key for st in self.slots if st is not None}
+        self._prefixes = {k: e for k, e in self._prefixes.items()
+                          if k in live}
 
     # ------------------------------------------------------------ lifecycle
 
-    def _admit_wave(self) -> list:
-        """Admit queue heads while a slot row and their WORST-CASE pages
-        (prompt + max_new_tokens) fit — admission control against the Eq. 2
-        ceiling. Reserving up front means a mid-decode append can never hit
-        an exhausted pool (concurrent lazy growers can deadlock each other
-        one page short); the queue, not an exception, is the backpressure.
+    def _admission_target(self, req: Request) -> int:
+        """TOKENS the admission must cover. Reserve mode: the request's
+        worst-case final length. Lazy mode: the (re-)prefill/restore length
+        plus ONE decode token of headroom (capped at the final written
+        length), so an admitted request always decodes at least one token
+        before it can be preempted — the liveness guarantee."""
+        final = len(req.prompt) + req.max_new_tokens
+        if not self.lazy_growth:
+            return final
+        held = req.snapshot["length"] if req.snapshot is not None \
+            else len(req.prefill_tokens)
+        # final - 1: the last sampled token is emitted, never written back
+        return min(held + 1, final - 1)
+
+    def _admit_wave(self) -> tuple:
+        """Admit queue heads while a slot row and their admission pages fit.
         FIFO: a too-big head blocks the queue (no starvation-prone
-        skipping)."""
-        admitted = []
+        skipping), and a head whose shared prefix is still being prefilled
+        by its creator waits one wave, then forks. Returns
+        (slots needing a prefill, slots restored from a swap snapshot)."""
+        admitted, restored = [], []
         while self.queue:
             req = self.queue[0]
-            worst = len(req.prompt) + req.max_new_tokens
-            if not self.pool.can_admit(worst):
+            handle, entry = None, None
+            if req.snapshot is None and req.prefix_key is not None:
+                entry = self._prefixes.get(req.prefix_key)
+                if entry is not None:
+                    if entry.handle is not None:
+                        handle = entry.handle
+                    elif entry.creator_rid is not None:
+                        break  # creator's prefill lands next wave; wait
+            target = self._admission_target(req)
+            if not self.pool.can_admit(target, prefix=handle):
                 break
-            slot = self.pool.admit(len(req.prompt), reserve_tokens=worst)
+            if req.snapshot is not None:
+                slot = self.pool.restore_slot(req.snapshot,
+                                              reserve_tokens=target)
+                self._swap_bytes -= sum(
+                    a.nbytes for leaves in req.snapshot["data"]
+                    for a in leaves)
+                req.snapshot = None
+                restored.append(slot)
+            else:
+                slot = self.pool.admit(len(req.prefill_tokens),
+                                       reserve_tokens=target, prefix=handle)
+                if handle is not None:
+                    entry.forks += 1
+                    self.stats.prefix_forks += 1
+                elif entry is not None:
+                    entry.creator_rid = req.rid
+                admitted.append(slot)
             self.queue.popleft()
-            self.slots[slot] = _SlotState(req.rid, req.prompt,
-                                          req.max_new_tokens, req.eos_id)
-            admitted.append(slot)
-        return admitted
+            self.slots[slot] = _SlotState(req, list(req.generated),
+                                          self._admit_seq)
+            self._admit_seq += 1
+        return admitted, restored
 
     def _prefill_wave(self, admitted: list) -> None:
         """One ragged right-aligned prefill over the admitted rows; the last
-        column is every row's final prompt token → first sampled token."""
-        lens = [len(self.slots[s].prompt) for s in admitted]
+        column is every row's final prompt token → first sampled token.
+        Forked rows carry only their SUFFIX (positions from prefix_len) and
+        attend the shared pages through ``paged_prefill_shared``."""
+        toks = [self.slots[s].req.prefill_tokens for s in admitted]
+        starts = [int(self.pool.lengths[s]) for s in admitted]  # 0 or prefix
+        lens = [t.size - st for t, st in zip(toks, starts)]  # suffix lengths
         s_pad = _bucket(max(lens))
         r = len(admitted)
         tokens = np.zeros((r, s_pad), np.int32)
         posn = np.full((r, s_pad), -1, np.int32)
         for i, slot in enumerate(admitted):
-            p = self.slots[slot].prompt
-            tokens[i, s_pad - p.size:] = p
-            posn[i, s_pad - p.size:] = np.arange(p.size)
-        logits, new_caches = self._prefill(
+            suffix = toks[i][starts[i]:]
+            tokens[i, s_pad - suffix.size:] = suffix
+            posn[i, s_pad - suffix.size:] = np.arange(starts[i], toks[i].size)
+        fn = self._prefill_shared if any(st > 0 for st in starts) \
+            else self._prefill
+        logits, new_caches = fn(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(rows=admitted),
             positions=jnp.asarray(posn))
         self.pool.update_from(new_caches)
         first = np.asarray(jnp.argmax(logits, axis=-1))
         for i, slot in enumerate(admitted):
-            self.pool.commit_prefill(slot, lens[i])
-            self.slots[slot].generated.append(int(first[i]))
+            st = self.slots[slot]
+            self.pool.commit_prefill(slot, int(toks[i].size))
+            if not st.generated:
+                st.generated.append(int(first[i]))
+            # resumed requests keep their already-emitted tokens: the last
+            # one is the next decode input, not a fresh sample
+            entry = self._prefixes.get(st.req.prefix_key) \
+                if st.req.prefix_key is not None else None
+            if entry is not None and entry.handle is None \
+                    and entry.creator_rid == st.req.rid:
+                entry.handle = self.pool.share_prefix(slot,
+                                                      entry.tokens.size)
+                entry.creator_rid = None
         self.stats.prefills += 1
         self.stats.admitted += r
 
+    def _release_idle_prefix(self) -> bool:
+        """Unpin one materialized prefix whose pages nobody but the handle
+        references (refcount 1 everywhere — e.g. every attached request
+        finished, or was preempted and will resume from its own swap
+        snapshot) — the cheapest way to make room before preempting live
+        work. A later same-key request simply re-creates the prefix."""
+        for entry in self._prefixes.values():
+            if entry.handle is None:
+                continue
+            if any(self.pool.refcount[p] > 1 for p in entry.handle.pages):
+                continue  # a live slot still reads these pages
+            self.pool.release_prefix(entry.handle)
+            entry.handle = None
+            entry.creator_rid = None
+            return True
+        return False
+
+    def _preempt_one(self, requester: int) -> bool:
+        """Evict the lowest-priority (ties: most recently admitted) running
+        request back to the queue head with its generated tokens; its pages
+        are freed for ``requester``'s growth. Refuses (returns False) when
+        the only candidate is the requester itself AND no idle prefix can
+        be released — then the pool is simply too small for the request and
+        the caller must fail loudly rather than thrash."""
+        if self._release_idle_prefix():
+            return True
+        cands = [(st.req.priority, -st.seq, i)
+                 for i, st in enumerate(self.slots) if st is not None]
+        if not cands:
+            return False
+        victim = min(cands)[2]
+        if victim == requester and len(cands) == 1:
+            return False
+        st = self.slots[victim]
+        st.req.generated = list(st.generated)
+        if self.resume == "swap":
+            # snapshot only positions actually WRITTEN: the victim may have
+            # run its speculative append this very tick (its pending token
+            # was never decoded, so its position holds no KV yet) — the
+            # accounted length would bake a permanent hole into the restore
+            written = len(st.req.prompt) + len(st.generated) - 1
+            st.req.snapshot = self.pool.export_slot(victim, n_tokens=written)
+            self._swap_bytes += sum(a.nbytes
+                                    for leaves in st.req.snapshot["data"]
+                                    for a in leaves)
+            self.stats.peak_swap_bytes = max(self.stats.peak_swap_bytes,
+                                             self._swap_bytes)
+        self.pool.free(victim)
+        self.slots[victim] = None
+        self.queue.appendleft(st.req)
+        self.stats.preemptions += 1
+        return True
+
     def _decode_tick(self) -> None:
         """One ragged decode step over EVERY slot (single compiled shape);
-        inactive rows carry position -1 and are masked end-to-end."""
+        inactive rows carry position -1 and are masked end-to-end. In lazy
+        mode, page-boundary growth that exhausts the pool preempts before
+        the step runs (the victim's un-decoded tick is simply not taken —
+        its resume re-prefills from exactly the tokens it had emitted)."""
+        for i in range(self.max_slots):
+            if self.slots[i] is None:
+                continue
+            while True:
+                try:
+                    self.pool.append(i, 1)
+                    break
+                except PoolExhaustedError:
+                    if not self._preempt_one(requester=i):
+                        raise PoolExhaustedError(
+                            f"request {self.slots[i].req.rid} cannot grow: "
+                            f"the pool's {self.pool.num_pages - 1} page(s) "
+                            f"cannot hold its worst case even alone")
+                    if self.slots[i] is None:
+                        break  # we were the victim; skip our own step
+        active = [i for i, st in enumerate(self.slots) if st is not None]
+        if not active:
+            return
         tokens = np.zeros((self.max_slots, 1), np.int32)
         pos = np.full((self.max_slots,), -1, np.int32)
-        for i, st in enumerate(self.slots):
-            if st is None:
-                continue
-            tokens[i, 0] = st.generated[-1]
-            pos[i] = self.pool.lengths[i]  # absolute position being written
-            self.pool.append(i, 1)
+        for i in active:
+            tokens[i, 0] = self.slots[i].generated[-1]
+            pos[i] = int(self.pool.lengths[i]) - 1  # position being written
         logits, new_caches = self._decode(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(), pos=jnp.asarray(pos))
         self.pool.update_from(new_caches)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        for i, st in enumerate(self.slots):
-            if st is not None:
-                st.generated.append(int(nxt[i]))
+        for i in active:
+            self.slots[i].generated.append(int(nxt[i]))
         self.stats.steps += 1
+        self.stats.slot_ticks += len(active)
 
     def _evict_finished(self) -> None:
         for i, st in enumerate(self.slots):
             if st is None or not st.done:
                 continue
-            toks = st.generated[: st.max_new_tokens]
-            if st.eos_id is not None and st.eos_id in toks:
-                toks = toks[: toks.index(st.eos_id) + 1]
-            self.results[st.rid] = np.concatenate(
-                [st.prompt, np.asarray(toks, np.int32)])
+            toks = st.generated[: st.req.max_new_tokens]
+            if st.req.eos_id is not None and st.req.eos_id in toks:
+                toks = toks[: toks.index(st.req.eos_id) + 1]
+            self.results[st.req.rid] = np.concatenate(
+                [st.req.prompt, np.asarray(toks, np.int32)])
             self.pool.free(i)
             self.slots[i] = None
             self.stats.evicted += 1
@@ -213,6 +474,8 @@ class Scheduler:
                                          self.pool.page_bytes_in_use())
         self.stats.peak_eq2_bytes = max(self.stats.peak_eq2_bytes,
                                         self.pool.eq2_bytes())
+        self.stats.peak_shared_pages = max(self.stats.peak_shared_pages,
+                                           self.pool.pages_shared)
 
     # ------------------------------------------------------------- driving
 
@@ -224,32 +487,45 @@ class Scheduler:
         """One scheduler tick: admit+prefill a wave, evict anything that
         finished on its prefill token, decode the ragged batch, evict.
         Returns whether work remains."""
-        admitted = self._admit_wave()
+        admitted, restored = self._admit_wave()
         if admitted:
-            self._prefill_wave(admitted)
+            # prefill fresh rows and forked rows separately: the shared
+            # path's full-pool history gather is paid only by rows that
+            # actually attend history
+            fresh = [s for s in admitted if int(self.pool.lengths[s]) == 0]
+            forked = [s for s in admitted if int(self.pool.lengths[s]) > 0]
+            for group in (fresh, forked):
+                if group:
+                    self._prefill_wave(group)
             self._track_occupancy()
             self._evict_finished()  # max_new_tokens == 1 finishes here
+        if restored:
+            self.stats.admitted += len(restored)
+            self._track_occupancy()
         if any(s is not None for s in self.slots):
             self._decode_tick()
             self._track_occupancy()
             self._evict_finished()
-        elif not admitted and self.queue:
-            # idle pool yet the head still doesn't fit: it never will —
-            # fail loudly instead of spinning forever
+        elif not admitted and not restored and self.queue:
+            # idle batch yet the head still doesn't fit: release an idle
+            # pinned prefix and retry; if nothing is releasable it never
+            # will fit — fail loudly instead of spinning forever
+            if self._release_idle_prefix():
+                return self.pending
             req = self.queue[0]
-            from repro.serving.kv_pool import PoolExhaustedError
-
+            need = self.pool.pages_for(self._admission_target(req))
+            kind = "for admission" if self.lazy_growth else "worst-case"
             raise PoolExhaustedError(
-                f"request {req.rid} needs "
-                f"{self.pool.pages_for(len(req.prompt) + req.max_new_tokens)}"
-                f" pages worst-case but the whole pool has "
-                f"{self.pool.num_pages - 1} (max_blocks "
+                f"request {req.rid} needs {need} pages {kind} but the "
+                f"whole pool has {self.pool.num_pages - 1} (max_blocks "
                 f"{self.pool.max_blocks}); it can never be admitted")
         return self.pending
 
     def run(self) -> dict:
         """Drain queue and batch; returns {rid: np.ndarray tokens} (prompt +
-        generation, EOS-truncated)."""
+        generation, EOS-truncated). Pinned prefixes are released after the
+        drain so the pool ends fully reclaimed."""
         while self.step():
             pass
+        self.release_prefixes()
         return self.results

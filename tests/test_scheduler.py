@@ -127,3 +127,150 @@ def test_scheduler_single_token_requests(tiny_model):
     eng = Engine(cfg, params, OPTS_Q, cache_len=32)
     np.testing.assert_array_equal(results[rid], eng.generate(p[None], 1).tokens[0])
     assert sched.stats.steps == 0  # finished at prefill, never decoded
+
+
+def test_prefix_sharing_matches_engine_and_saves_pool_bytes(tiny_model):
+    """Acceptance: requests attached to a shared 10-token prefix (page 4 →
+    partial boundary page, so the CoW path runs) produce greedy tokens
+    IDENTICAL to the per-request Engine, while the pool's physical peak is
+    LOWER than the same workload served without sharing."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, (10,))
+    jobs = [(3, 3), (2, 4), (4, 2), (3, 3)]  # (suffix_len, max_new)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (n,))])
+               for n, _ in jobs]
+
+    def serve(shared: bool):
+        sched = Scheduler(cfg, params, OPTS_Q, num_pages=32, page_size=4,
+                          max_slots=2)
+        # only the key's FIRST submit declares prefix_len; later submits
+        # (ragged prompt lengths) inherit the registered length
+        rids = [sched.submit(p, mn,
+                             prefix_key="sys" if shared else None,
+                             prefix_len=10 if i == 0 else None)
+                for i, (p, (_, mn)) in enumerate(zip(prompts, jobs))]
+        return sched, rids, sched.run()
+
+    sched, rids, results = serve(shared=True)
+    base, _, base_results = serve(shared=False)
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    for rid, p, (_, mn) in zip(rids, prompts, jobs):
+        want = eng.generate(p[None], mn).tokens[0]
+        np.testing.assert_array_equal(results[rid], want)
+        np.testing.assert_array_equal(base_results[rid], want)
+    assert sched.stats.prefix_forks >= 2  # later requests really attached
+    assert sched.stats.peak_shared_pages > 0
+    assert sched.stats.peak_pool_bytes < base.stats.peak_pool_bytes
+    # drained: pinned prefix released, every page home again
+    assert sched.pool.pages_in_use == 0 and not sched.pool.active.any()
+
+
+@pytest.mark.parametrize("resume", ["swap", "refill"])
+def test_preemption_lazy_growth_matches_engine(tiny_model, resume):
+    """Acceptance: lazy admission over a pool too small for every request's
+    worst case — growth exhausts the pool mid-decode, the lowest-priority
+    request is evicted to the queue and later RESUMED (bit-identical page
+    restore by default; re-prefill also matches on this workload) — and
+    every result is identical to the isolated Engine run."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(11)
+    jobs = [(6, 8, 1), (5, 9, 0), (4, 8, 0)]  # (prompt, max_new, priority)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n, _, _ in jobs]
+    # 8 usable pages: prompts alone need 2+2+1, worst cases need 4+4+3
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=9, page_size=4,
+                      max_slots=3, lazy_growth=True, resume=resume)
+    rids = [sched.submit(p, mn, priority=pr)
+            for p, (_, mn, pr) in zip(prompts, jobs)]
+    results = sched.run()
+    assert sched.stats.preemptions >= 1  # the pool really forced eviction
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    for rid, p, (_, mn, _) in zip(rids, prompts, jobs):
+        np.testing.assert_array_equal(results[rid],
+                                      eng.generate(p[None], mn).tokens[0])
+    assert sched.pool.pages_in_use == 0  # preempt/resume leaked nothing
+
+
+def test_preemption_victim_is_lowest_priority(tiny_model):
+    """Victim selection: the priority-0 request is evicted (and resumed),
+    the priority-1 request admitted at the same time never is."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(13)
+    hi = rng.integers(0, cfg.vocab_size, (5,))
+    lo = rng.integers(0, cfg.vocab_size, (5,))
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=6, page_size=4,
+                      max_slots=2, lazy_growth=True)
+    rid_hi = sched.submit(hi, 8, priority=1)
+    rid_lo = sched.submit(lo, 8, priority=0)
+    results = sched.run()
+    assert sched.stats.preemptions >= 1
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    np.testing.assert_array_equal(results[rid_hi],
+                                  eng.generate(hi[None], 8).tokens[0])
+    np.testing.assert_array_equal(results[rid_lo],
+                                  eng.generate(lo[None], 8).tokens[0])
+
+
+def test_shared_prefix_with_preemption_roundtrip(tiny_model):
+    """The full tentpole combination: forked requests under lazy growth get
+    preempted, re-fork on resume (their prefix stays pinned), and still
+    match the Engine bit-for-bit."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(17)
+    prefix = rng.integers(0, cfg.vocab_size, (8,))  # 2 full pages
+    jobs = [(2, 6), (3, 6), (2, 6)]
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (n,))])
+               for n, _ in jobs]
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=8, page_size=4,
+                      max_slots=3, lazy_growth=True)
+    rids = [sched.submit(p, mn, prefix_key="sys", prefix_len=8)
+            for p, (_, mn) in zip(prompts, jobs)]
+    results = sched.run()
+    assert sched.stats.prefix_forks >= 2
+    assert sched.stats.preemptions >= 1
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    for rid, p, (_, mn) in zip(rids, prompts, jobs):
+        np.testing.assert_array_equal(results[rid],
+                                      eng.generate(p[None], mn).tokens[0])
+    assert sched.pool.pages_in_use == 0
+
+
+def test_prefix_mismatch_rejected(tiny_model):
+    cfg, params = tiny_model
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=16, page_size=4,
+                      max_slots=2)
+    rng = np.random.default_rng(19)
+    a = rng.integers(0, cfg.vocab_size, (8,))
+    b = a.copy()
+    b[2] = (b[2] + 1) % cfg.vocab_size
+    sched.submit(a, 2, prefix_key="k", prefix_len=6)
+    with pytest.raises(ValueError, match="does not match"):
+        sched.submit(b, 2, prefix_key="k", prefix_len=6)
+
+
+def test_swap_snapshot_excludes_speculative_append(tiny_model):
+    """Regression: slot 0 runs its speculative append for the tick, then
+    slot 1's append exhausts the pool and preempts slot 0 — the snapshot
+    must cover only WRITTEN positions (the pending token's position holds
+    no KV yet), or the restore carries a permanent pos=-1 hole and the
+    resumed decode diverges. Both results must match the Engine exactly."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, cfg.vocab_size, (5,))  # slot 0, preemption victim
+    b = rng.integers(0, cfg.vocab_size, (5,))
+    # 5 usable pages: both admit at 2 pages (prompt 5 + 1 headroom), slot 0
+    # grabs the 5th page at length 9, slot 1's matching append exhausts →
+    # victim is slot 0 (priority), AFTER its own append already landed
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=6, page_size=4,
+                      max_slots=2, lazy_growth=True, resume="swap")
+    ra = sched.submit(a, 8, priority=0)
+    rb = sched.submit(b, 8, priority=1)
+    results = sched.run()
+    assert sched.stats.preemptions >= 1
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    np.testing.assert_array_equal(results[ra],
+                                  eng.generate(a[None], 8).tokens[0])
+    np.testing.assert_array_equal(results[rb],
+                                  eng.generate(b[None], 8).tokens[0])

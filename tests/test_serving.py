@@ -133,6 +133,48 @@ def test_split_engine_paged_cloud_matches_dense(tiny_model):
     assert st.cloud_pool_bytes_peak * 8 <= st.uplink_bits_eq3
 
 
+
+def test_split_engine_shared_cloud_prefix_dedupes_pages_and_uplink(tiny_model):
+    """Edge devices sharing a system prompt: with ``shared_prefix_len`` the
+    cloud pool holds the prefix pages ONCE (rows 1+ fork from row 0), the
+    prefix crosses the uplink once, and the generated tokens still match
+    the unshared paged run."""
+    cfg, params = tiny_model
+    opsc = OPSCConfig(split_layer=1, qw_front=16, i_kv=1)
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, cfg.vocab_size, (1, 8))
+    sufs = rng.integers(0, cfg.vocab_size, (3, 4))
+    prompts = np.concatenate([np.repeat(prefix, 3, axis=0), sufs], axis=1)
+
+    def build():
+        return SplitEngine(cfg, params, opsc, opts=OPTS, cache_len=64,
+                           paged_cloud_kv=True, cloud_pool_pages=16,
+                           cloud_page_size=8)
+
+    t_plain, st_plain = build().generate(prompts, 5, compress=False)
+    t_shared, st = build().generate(prompts, 5, compress=False,
+                                    shared_prefix_len=8)
+    np.testing.assert_array_equal(t_shared, t_plain)
+    assert st.shared_prefix_pages == 1  # one 8-token page pinned
+    # physical cloud residency and page-granular uplink dedupe the prefix
+    assert st.cloud_pool_bytes_peak < st_plain.cloud_pool_bytes_peak
+    assert st.uplink_bits_paged < st_plain.uplink_bits_paged
+    # rows 1+ never ship their prefix hidden states
+    assert st.uplink_bits_measured < st_plain.uplink_bits_measured
+    # mismatched rows are rejected loudly, not silently deduped
+    bad = prompts.copy()
+    bad[1, 2] = (bad[1, 2] + 1) % cfg.vocab_size
+    with pytest.raises(ValueError, match="do not share"):
+        build().generate(bad, 5, compress=False, shared_prefix_len=8)
+    # a declared prefix below one page disables the dedup (rounds to 0
+    # shared pages) but MUST still validate the declared tokens
+    with pytest.raises(ValueError, match="do not share"):
+        build().generate(bad, 5, compress=False, shared_prefix_len=3)
+    t_sub, st_sub = build().generate(prompts, 5, compress=False,
+                                     shared_prefix_len=3)
+    assert st_sub.shared_prefix_pages == 0
+    np.testing.assert_array_equal(t_sub, t_plain)
+
 # ------------------------------------------------ engine compile-cache key
 
 

@@ -1,0 +1,75 @@
+"""docs-check: verify that intra-repo links and back-ticked file paths in
+the repo's markdown docs resolve to real files.
+
+  python tools/check_links.py [README.md src/repro/serving/README.md ...]
+
+With no arguments, checks the default doc set (root README + serving
+README). External links (http/https/mailto) and pure anchors are skipped;
+relative links are resolved against each file's own directory AND the repo
+root (both styles appear in the docs). Exits non-zero listing every broken
+link — the CI docs-check job fails on rot.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_DOCS = ["README.md", "src/repro/serving/README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# back-ticked tokens that look like repo paths: `src/...`, `tests/...`, etc.
+PATH_RE = re.compile(
+    r"`((?:src|tests|benchmarks|examples|experiments|tools|\.github)"
+    r"/[^`\s]+?)`")
+
+
+def _exists(base_dir: str, target: str) -> bool:
+    target = target.split("#", 1)[0]
+    if not target:
+        return True  # pure anchor
+    for root in (base_dir, REPO):
+        if os.path.exists(os.path.join(root, target)):
+            return True
+    return False
+
+
+def check(path: str) -> list:
+    broken = []
+    base = os.path.dirname(os.path.join(REPO, path))
+    text = open(os.path.join(REPO, path)).read()
+    for num, line in enumerate(text.splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            t = m.group(1)
+            if t.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            if not _exists(base, t):
+                broken.append(f"{path}:{num}: broken link -> {t}")
+        for m in PATH_RE.finditer(line):
+            t = m.group(1).rstrip("/").split("#")[0].split("::")[0]
+            # module globs / command lines aren't file references
+            if any(ch in t for ch in "*<>{}"):
+                continue
+            if not _exists(base, t):
+                broken.append(f"{path}:{num}: missing path -> {t}")
+    return broken
+
+
+def main() -> None:
+    docs = sys.argv[1:] or DEFAULT_DOCS
+    broken = []
+    for d in docs:
+        if not os.path.exists(os.path.join(REPO, d)):
+            broken.append(f"{d}: doc file itself is missing")
+            continue
+        broken.extend(check(d))
+    if broken:
+        print("\n".join(broken))
+        raise SystemExit(1)
+    print(f"docs-check: {len(docs)} file(s), all links resolve")
+
+
+if __name__ == "__main__":
+    main()
