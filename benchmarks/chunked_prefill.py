@@ -1,0 +1,180 @@
+"""chunked_prefill benchmark: TTFT and tail tick latency under Sarathi-style
+chunked prefill vs the wave prefill it replaces.
+
+Three prompt mixes are served three ways through the SAME scheduler and
+pool (worst-case admission, kernels in interpret mode off-TPU):
+
+  * wave         — ``prefill_mode="wave"``: an admission prefills its whole
+    (bucketed) prompt in one ragged call. A long prompt stalls every
+    decoding request for its full length AND each new (R_adm, S_pad)
+    bucket is a fresh XLA compile;
+  * chunked      — ``prefill_mode="chunked"`` (the default): prompts advance
+    one fixed-size chunk per tick through ONE compiled shape; continuation
+    chunks attend their earlier chunks in place via the Pallas
+    ``kernels.paged_prefill_attention`` page walk;
+  * dense_gather — chunked scheduling but
+    ``RuntimeOpts(paged_prefill_kernel=False)``: continuation chunks gather
+    the WHOLE pool dense and dequantize it per layer (the pre-kernel path)
+    — isolating the kernel's contribution from the scheduler's.
+
+Reported per mix/variant: wall TTFT (mean/max over requests) and TTFT in
+scheduler ticks, the TAIL tick latency (the longest single tick — what a
+co-resident decode request experiences while a prompt admits), tokens/s,
+the distinct-jit-shape count, and greedy parity vs per-request
+``Engine.generate``. CPU wall numbers are call-path + compile-churn
+comparisons, not TPU performance; the tick/shape columns are exact on any
+backend. JSON artifact under experiments/chunked_prefill/.
+
+  PYTHONPATH=src python -m benchmarks.chunked_prefill [--smoke]
+
+``--smoke`` runs one shrunken mix — the CI chunked-prefill smoke step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "chunked_prefill")
+
+# (prompt_len, max_new_tokens) per request; pool pages per mix
+MIXES = {
+    # the headline case: one long prompt admitted while short ones decode
+    "one_long": {"jobs": [(48, 4), (4, 10), (6, 10), (5, 10)], "pages": 28},
+    "bimodal": {"jobs": [(24, 4), (6, 8), (24, 4), (6, 8)], "pages": 28},
+    # control: all prompts fit one chunk — chunking must not cost anything
+    "short": {"jobs": [(6, 6)] * 4, "pages": 20},
+}
+SMOKE_MIXES = {"one_long": {"jobs": [(16, 3), (4, 6)], "pages": 16}}
+
+PAGE_SIZE = 4
+CHUNK = 8
+MAX_SLOTS = 3  # fewer slots than requests → mid-stream admission exercised
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import RuntimeOpts, init_params
+
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opts = RuntimeOpts(q_chunk=16, kv_chunk=32, remat=False,
+                       quantized_kv=True, moe_capacity_factor=0.0)
+    return cfg, params, opts
+
+
+def _serve(cfg, params, opts, jobs, prompts, variant, pages):
+    import dataclasses
+
+    import numpy as np
+
+    from repro.serving.scheduler import Scheduler
+
+    mode = "wave" if variant == "wave" else "chunked"
+    if variant == "dense_gather":
+        opts = dataclasses.replace(opts, paged_prefill_kernel=False)
+    max_seq = max(n + mn for n, mn in jobs)
+    sched = Scheduler(cfg, params, opts, num_pages=pages,
+                      page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+                      max_seq_len=max_seq, prefill_mode=mode,
+                      prefill_chunk=CHUNK)
+    rids = [sched.submit(p, mn) for p, (_, mn) in zip(prompts, jobs)]
+    first_wall: dict = {}
+    tick_walls = []
+    t0 = time.time()
+    while True:
+        t_tick = time.time()
+        more = sched.step()
+        now = time.time()
+        tick_walls.append(now - t_tick)
+        for s in sched.slots:  # a request's first token appears in-slot...
+            if s is not None and s.generated:
+                first_wall.setdefault(s.req.rid, now - t0)
+        for rid in sched.results:  # ...or it already finished this tick
+            first_wall.setdefault(rid, now - t0)
+        if not more:
+            break
+    wall = time.time() - t0
+    results = sched.results
+    total_tokens = sum(mn for _, mn in jobs)
+    ttft_ticks = [sched.stats.ttft_ticks[r] for r in rids]
+    ttft_wall = [first_wall[r] for r in rids]
+    return results, rids, {
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(total_tokens / wall, 2),
+        "mean_ttft_s": round(float(np.mean(ttft_wall)), 3),
+        "max_ttft_s": round(float(np.max(ttft_wall)), 3),
+        "mean_ttft_ticks": round(float(np.mean(ttft_ticks)), 2),
+        "max_ttft_ticks": int(np.max(ttft_ticks)),
+        "tail_tick_s": round(float(np.max(tick_walls)), 3),
+        "median_tick_s": round(float(np.median(tick_walls)), 4),
+        "ticks": len(tick_walls),
+        "decode_steps": sched.stats.steps,
+        "prefill_calls": sched.stats.prefills,
+        "prefill_chunks": sched.stats.prefill_chunks,
+        "compiled_shapes": sched.stats.compiled_shapes,
+    }
+
+
+def bench_chunked_prefill(smoke: bool = False):
+    import numpy as np
+
+    from repro.serving.engine import Engine
+
+    cfg, params, opts = _build()
+    mixes = SMOKE_MIXES if smoke else MIXES
+    rng = np.random.default_rng(0)
+    rows, rec = [], {"config": {"arch": cfg.name, "page_size": PAGE_SIZE,
+                                "chunk": CHUNK, "max_slots": MAX_SLOTS,
+                                "smoke": smoke}}
+    eng = Engine(cfg, params, opts, cache_len=64)
+    for name, mix in mixes.items():
+        jobs = mix["jobs"]
+        prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n, _ in jobs]
+        want = [eng.generate(p[None], mn).tokens[0]
+                for p, (_, mn) in zip(prompts, jobs)]
+        entry = {"requests": len(jobs)}
+        for variant in ("wave", "chunked", "dense_gather"):
+            results, rids, m = _serve(cfg, params, opts, jobs, prompts,
+                                      variant, mix["pages"])
+            m["outputs_match_baseline"] = all(
+                np.array_equal(results[r], w) for r, w in zip(rids, want))
+            entry[variant] = m
+            rows.append((f"chunked_prefill/{name}_{variant}",
+                         m["wall_s"] * 1e6,
+                         f"ttft={m['mean_ttft_s']}s "
+                         f"tail_tick={m['tail_tick_s']}s "
+                         f"shapes={m['compiled_shapes']}"))
+        entry["ttft_reduction_vs_wave"] = round(
+            entry["wave"]["mean_ttft_s"]
+            / max(entry["chunked"]["mean_ttft_s"], 1e-9), 2)
+        entry["tail_tick_reduction_vs_wave"] = round(
+            entry["wave"]["tail_tick_s"]
+            / max(entry["chunked"]["tail_tick_s"], 1e-9), 2)
+        rec[name] = entry
+        rows.append((f"chunked_prefill/{name}_ttft_reduction", 0.0,
+                     entry["ttft_reduction_vs_wave"]))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "chunked_prefill_smoke.json" if smoke
+                       else "chunked_prefill.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one shrunken mix (CI chunked-prefill smoke step)")
+    args = ap.parse_args()
+    for name, us, derived in bench_chunked_prefill(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

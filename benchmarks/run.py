@@ -16,12 +16,14 @@ import time
 
 def _registry():
     from benchmarks import paper_benchmarks as pb
+    from benchmarks.chunked_prefill import bench_chunked_prefill
     from benchmarks.decode_path import bench_decode_path
     from benchmarks.prefix_sharing import bench_prefix_sharing
     from benchmarks.ragged_batch import bench_ragged_batch
     from benchmarks.roofline_report import bench_roofline
 
     return {
+        "chunked_prefill": bench_chunked_prefill,
         "decode_path": bench_decode_path,
         "prefix_sharing": bench_prefix_sharing,
         "ragged_batch": bench_ragged_batch,

@@ -14,6 +14,15 @@ the serving path, not a side gallery:
       ``serving.kv_pool`` pool, with per-request causal bounds for ragged
       continuous batching. ``models.layers.paged_decode_attention_layer``
       routes every decode over a ``PagedKVCache`` here.
+  paged_prefill_attention — the PREFILL page walk (the TTFT path): a
+      flash-style (request, kv-head, q-block) grid folds the request's
+      block-table pages (int8 history dequantized in-register, masked per
+      query row below its first in-call position) and the call's fresh
+      full-precision keys into one online softmax — the dense f32 gather
+      of the pool never materializes. ``models.layers.
+      paged_prefill_attention`` routes shared-prefix and chunked-prefill
+      attention here (dense-gather fallback for softcapped layers or
+      ``RuntimeOpts.paged_prefill_kernel=False``).
   tabq_kernel — per-token TAB-Q magnitude quantization (Eq. 5-6), int8
       code carrier (codes rebased per token to [0, Q_max]).
   dequant_matmul — int8-weight × fp-activation matmul with per-channel

@@ -68,3 +68,21 @@ def paged_decode_attention(q, k_codes, k_scale, v_codes, v_scale, pool_pos,
     interpret = _default_interpret() if interpret is None else interpret
     return _pda(q, k_codes, k_scale, v_codes, v_scale, pool_pos, block_table,
                 q_pos, interpret)
+
+
+@partial(jax.jit, static_argnames=("q_block", "interpret"))
+def paged_prefill_attention(q, k_codes, k_scale, v_codes, v_scale, pool_pos,
+                            block_table, q_pos, k_fresh, v_fresh,
+                            q_block: int = 128, interpret: bool | None = None):
+    """Ragged prefill page walk: q (R,K,S,G,hd) against the pool's history
+    pages (masked below each row's first in-call position) plus the call's
+    fresh k/v (R,K,S,hd) at full precision. ``start`` is derived from
+    ``q_pos`` here so kernel and callers can never disagree on it."""
+    from repro.kernels.paged_prefill_attention import (
+        first_call_position, paged_prefill_attention as _ppa)
+
+    interpret = _default_interpret() if interpret is None else interpret
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    start = first_call_position(q_pos)
+    return _ppa(q, k_codes, k_scale, v_codes, v_scale, pool_pos, block_table,
+                q_pos, start, k_fresh, v_fresh, q_block, interpret)

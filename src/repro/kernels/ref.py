@@ -88,3 +88,42 @@ def paged_decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale,
     vs = gather_pages_ref(v_scale, block_table)
     kv_pos = gather_pages_ref(pool_pos, block_table)
     return decode_attention_ref(q, kc, ks, vc, vs, kv_pos, q_pos)
+
+
+def paged_prefill_attention_ref(q, k_codes, k_scale, v_codes, v_scale,
+                                pool_pos, block_table, q_pos, start,
+                                k_fresh, v_fresh):
+    """Dense oracle for the paged PREFILL page-walk kernel.
+
+    q (R,K,S,G,hd); pool codes (P,K,page,hd) int8 with scales (P,K,page);
+    pool_pos (P,page); block_table (R,nb); q_pos (R,S) per-token positions
+    (-1 pads); start (R,) each row's first in-call position; fresh k/v
+    (R,K,S,hd) full precision → (R,K,S,G,hd) f32.
+
+    Each query row attends the union of (a) its gathered pool pages,
+    dequantized, masked to stored positions < start (the shared-prefix /
+    earlier-chunk history — this call's own pool writes are excluded), and
+    (b) the call's fresh keys, causally masked by q_pos. Rows with no valid
+    key emit exact zeros."""
+    hd = q.shape[-1]
+    kd = gather_pages_ref(k_codes, block_table)  # (R, K, Sp, hd)
+    vd = gather_pages_ref(v_codes, block_table)
+    ks = gather_pages_ref(k_scale, block_table)
+    vs = gather_pages_ref(v_scale, block_table)
+    hist_pos = gather_pages_ref(pool_pos, block_table)  # (R, Sp)
+    k_hist = kd.astype(jnp.float32) * ks[..., None]
+    v_hist = vd.astype(jnp.float32) * vs[..., None]
+    k_all = jnp.concatenate([k_hist, k_fresh.astype(jnp.float32)], axis=2)
+    v_all = jnp.concatenate([v_hist, v_fresh.astype(jnp.float32)], axis=2)
+    ok_hist = (hist_pos >= 0) & (hist_pos < start[:, None])
+    kv_pos = jnp.concatenate(
+        [jnp.where(ok_hist, hist_pos, -1), q_pos], axis=1)  # (R, Sp+S)
+    s = jnp.einsum("rksgd,rked->rksge", q.astype(jnp.float32) / (hd ** 0.5),
+                   k_all, preferred_element_type=jnp.float32)
+    valid = ((kv_pos[:, None, :] >= 0)
+             & (kv_pos[:, None, :] <= q_pos[:, :, None]))  # (R, S, Skv)
+    s = jnp.where(valid[:, None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("rksge,rked->rksgd", p, v_all)
+    any_valid = jnp.any(valid, axis=-1)  # (R, S)
+    return jnp.where(any_valid[:, None, :, None, None], out, 0.0)

@@ -12,7 +12,9 @@ Caches come in three layouts:
   * paged (``PagedKVCache``): the int8 layout cut into fixed pages of a
     shared pool addressed by per-request block tables — ragged batches from
     ``serving.kv_pool``, streamed by ``kernels.paged_decode_attention``
-    (see :func:`paged_decode_attention_layer`).
+    at decode (see :func:`paged_decode_attention_layer`) and by
+    ``kernels.paged_prefill_attention`` for shared-prefix / chunked
+    prefill (see :func:`paged_prefill_attention`).
 
 Shapes: activations (B, S, D); q/k/v (B, S, H|K, hd).
 """
@@ -464,30 +466,51 @@ def _gather_dense_kv(cache: PagedKVCache):
 
 
 def paged_prefill_attention(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
-                            q_positions, *, q_chunk=1024, kv_chunk=1024):
-    """Prefill attention THROUGH the paged pool — the shared-prefix entry.
+                            q_positions, *, q_chunk=1024, kv_chunk=1024,
+                            use_kernel: bool = True):
+    """Prefill attention THROUGH the paged pool — the shared-prefix /
+    chunked-prefill entry.
 
     A plain prefill attends only the call's fresh k/v; a request forked from
-    a shared prefix additionally owns block-table pages holding tokens
-    written BEFORE this call (the prefix). Each row attends the union of
+    a shared prefix — or a chunked prefill's continuation chunk — additionally
+    owns block-table pages holding tokens written BEFORE this call (the
+    prefix / the earlier chunks). Each row attends the union of
 
-      * its gathered pool history, masked to stored positions < the row's
-        FIRST in-call position (so tokens this very call scatters into the
-        pool are not double-counted, and a row prefilling from position 0
-        sees no history at all), dequantized from int8 — exactly what its
-        decode steps will read; and
+      * its pool history, masked to stored positions < the row's FIRST
+        in-call position (so tokens this very call scatters into the pool
+        are not double-counted, and a row prefilling from position 0 sees
+        no history at all), dequantized from int8 — exactly what its decode
+        steps will read; and
       * the call's fresh keys/values at full precision, masked causally by
         ``q_positions`` like the plain ragged prefill.
 
     ``cache`` must be the post-update pool (this call's tokens already
     scattered), so rows created in the SAME call can serve as each other's
     prefix — the split engine prefills the prefix owner and its forks in
-    one batched call. Correct-not-fast: the history is gathered dense via
-    the block table (like the softcap fallback); the Pallas page walk stays
-    decode-only."""
+    one batched call.
+
+    The default path walks the history pages in place with the Pallas
+    ``kernels.paged_prefill_attention`` flash kernel (int8 dequantized
+    in-register through the block-table index map — no dense f32 copy of
+    the pool in HBM). Softcapped / windowed layers, and callers passing
+    ``use_kernel=False`` (``RuntimeOpts.paged_prefill_kernel``), fall back
+    to gathering the pool dense into ``chunked_attention`` — correct, not
+    fast."""
+    if use_kernel and spec.attn_softcap is None and spec.sliding_window is None:
+        from repro.kernels.ops import paged_prefill_attention as _kernel
+
+        b, s, h, hd = q.shape
+        kh = cache.k.shape[1]
+        qk = q.reshape(b, s, kh, h // kh, hd).transpose(0, 2, 1, 3, 4)
+        out = _kernel(qk, cache.k, cache.k_scale, cache.v, cache.v_scale,
+                      cache.pos, cache.block_table,
+                      jnp.asarray(q_positions, jnp.int32),
+                      jnp.swapaxes(k_fresh, 1, 2), jnp.swapaxes(v_fresh, 1, 2))
+        return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, hd).astype(q.dtype)
+    from repro.kernels.paged_prefill_attention import first_call_position
+
     k_hist, v_hist, hist_pos = _gather_dense_kv(cache)
-    start = jnp.min(jnp.where(q_positions >= 0, q_positions, jnp.int32(2**30)),
-                    axis=1)  # (R,) first in-call position per row
+    start = first_call_position(q_positions)  # (R,) per-row history bound
     hist_pos = jnp.where(hist_pos < start[:, None], hist_pos, -1)
     k = jnp.concatenate([k_hist, k_fresh.astype(jnp.float32)], axis=1)
     v = jnp.concatenate([v_hist, v_fresh.astype(jnp.float32)], axis=1)
@@ -553,7 +576,8 @@ def init_attention_params(key, d_model: int, num_heads: int, num_kv_heads: int,
 
 def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | None,
                     pos, q_positions, q_chunk=1024, kv_chunk=1024,
-                    decode: bool = False, attend_cache: bool = False):
+                    decode: bool = False, attend_cache: bool = False,
+                    prefill_kernel: bool = True):
     """One attention layer.
 
     ``rope_cs``: (cos, sin) tables for the query positions, or None.
@@ -601,7 +625,8 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
                 softcap=spec.attn_softcap, q_chunk=q_chunk, kv_chunk=kv_chunk)
     elif attend_cache and isinstance(new_cache, PagedKVCache):
         out = paged_prefill_attention(q, new_cache, k, v, spec, q_positions,
-                                      q_chunk=q_chunk, kv_chunk=kv_chunk)
+                                      q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                      use_kernel=prefill_kernel)
     else:
         out = chunked_attention(
             q, k, v, q_positions, q_positions,

@@ -53,6 +53,11 @@ class RuntimeOpts:
     # SSD recurrent-state STORAGE dtype (compute stays f32): bf16 halves the
     # hybrid/SSM decode cache footprint (jamba fit fix, EXPERIMENTS §Dry-run)
     ssm_state_dtype: str = "float32"
+    # route shared-prefix / chunked prefill attention through the Pallas
+    # page-walk kernel (kernels.paged_prefill_attention); False falls back
+    # to gathering the pool dense per layer — the pre-kernel baseline the
+    # chunked_prefill benchmark measures against
+    paged_prefill_kernel: bool = True
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +207,8 @@ def _apply_layer(cfg, ls: LayerSpec, p, x, *, rope_cs, q_positions, cache, pos,
         out, new_cache = L.attention_layer(
             p["mixer"], h, ls.mixer, rope_cs=rope_cs, cache=cache, pos=pos,
             q_positions=q_positions, q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
-            decode=decode, attend_cache=attend_cache)
+            decode=decode, attend_cache=attend_cache,
+            prefill_kernel=opts.paged_prefill_kernel)
     else:
         conv_state, ssm_state = cache if cache is not None else (None, None)
         out, new_cache = ssm_layer(p["mixer"], h, ls.mixer,

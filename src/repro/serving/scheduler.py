@@ -26,10 +26,25 @@ Lifecycle per request (see ``serving/README.md``):
             FORK — their block tables alias the pinned pages (refcount +1
             each) and only suffix pages (plus one CoW boundary copy when
             the prefix is not page-aligned) are newly allocated
-  prefill — the admitted group prefills RAGGEDLY: right-aligned padding,
-            per-row position masks, one call whose last column yields every
-            row's first sampled token. Forked rows prefill ONLY their
-            suffix, attending the shared prefix through their block tables
+  prefill — two policies (``prefill_mode=``):
+              * "chunked" (default, Sarathi-style) — every prompt is split
+                into fixed ``prefill_chunk``-token pieces and each tick
+                advances every mid-prefill slot by ONE chunk through a
+                FIXED-shape ``(max_slots, prefill_chunk)`` call: one
+                compile serves every admission, per-tick latency is
+                bounded by the chunk (a long prompt can no longer stall
+                the decoding batch for its full length), and continuation
+                chunks attend their earlier chunks THROUGH the pool via
+                the Pallas ``kernels.paged_prefill_attention`` page walk
+                — exactly what their decode steps will read. The chunk's
+                last column yields the first sampled token when it
+                completes the prompt
+              * "wave" — the pre-chunking behavior: the admitted group
+                prefills RAGGEDLY in one right-aligned call of bucketed
+                ``(R_adm, S_pad)`` shape (a distinct compile per bucket,
+                and decode waits for the full prompt)
+            Either way, forked rows prefill ONLY their suffix, attending
+            the shared prefix through their block tables
             (``models.transformer.paged_prefill_shared``)
   decode  — ALL active slots step together through ONE jitted
             ``paged_decode_step`` (fixed slot-count shape → a single
@@ -97,6 +112,10 @@ class Request:
     # host snapshot of the request's written pages
     generated: list = dataclasses.field(default_factory=list)
     snapshot: dict | None = dataclasses.field(default=None, repr=False)
+    submit_tick: int = 0  # scheduler tick at submission (TTFT accounting)
+    # anti-thrash backoff: a preempted request is not re-admitted before
+    # this tick while its preemptor still runs (see _admit_wave)
+    cooldown_until: int = 0
 
     @property
     def prefill_tokens(self) -> np.ndarray:
@@ -125,6 +144,12 @@ class _SlotState:
     req: Request
     generated: list
     seq: int  # admission sequence number (preemption tie-break)
+    prefilled: int = 0  # prompt/resume TOKENS already written to the pool
+
+    @property
+    def prefilling(self) -> bool:
+        """Still mid-prefill: more chunks to write before the slot decodes."""
+        return self.prefilled < len(self.req.prefill_tokens)
 
     @property
     def done(self) -> bool:
@@ -137,7 +162,10 @@ class _SlotState:
 @dataclasses.dataclass
 class SchedulerStats:
     steps: int = 0  # ragged decode steps executed
-    prefills: int = 0  # ragged prefill calls (≈ admission waves)
+    prefills: int = 0  # prefill CALLS: admission waves in "wave" mode, per-
+    #                    tick fixed-shape chunk calls in "chunked" mode
+    prefill_chunks: int = 0  # per-slot chunks written (chunked mode; a
+    #                          single-chunk prompt counts 1)
     admitted: int = 0  # admissions incl. resumptions
     evicted: int = 0  # completed requests
     preemptions: int = 0  # evict-to-queue events (lazy mode)
@@ -149,6 +177,10 @@ class SchedulerStats:
     peak_eq2_bytes: int = 0  # logical per-request Eq. 2 bytes
     peak_shared_pages: int = 0  # pages with refcount > 1
     peak_swap_bytes: int = 0  # host bytes held by swapped-out snapshots
+    compiled_shapes: int = 0  # distinct jitted step shapes seen (chunked
+    #                           mode stays O(1); wave mode grows per bucket)
+    # rid → ticks from submit to the first sampled token (TTFT in ticks)
+    ttft_ticks: dict = dataclasses.field(default_factory=dict)
 
 
 def _bucket(n: int) -> int:
@@ -164,21 +196,43 @@ class Scheduler:
     admit→prefill→decode→evict tick for incremental/streaming use.
     ``lazy_growth=True`` switches admission control from worst-case page
     reservation to current-need reservation with preemption on exhaustion
-    (see module doc)."""
+    (see module doc).
+
+    ``prefill_mode="chunked"`` (default) admits prompts in fixed
+    ``prefill_chunk``-token pieces through one compiled step shape (see
+    module doc); ``"wave"`` restores the per-bucket ragged wave prefill.
+    ``preempt_cooldown`` (ticks) is the anti-thrash backoff: a preempted
+    request is held in the queue that many extra ticks before re-admission
+    while other work runs, so an evict→re-admit→evict swap storm can't
+    oscillate tick over tick (0 restores the immediate re-admit)."""
 
     def __init__(self, cfg: ArchConfig, params,
                  opts: RuntimeOpts = RuntimeOpts(),
                  *, num_pages: int = 128, page_size: int = DEFAULT_PAGE_SIZE,
                  max_slots: int = 4, max_seq_len: int | None = None,
-                 lazy_growth: bool = False, resume: str = "swap"):
+                 lazy_growth: bool = False, resume: str = "swap",
+                 prefill_mode: str = "chunked", prefill_chunk: int = 256,
+                 preempt_cooldown: int = 1):
         if resume not in ("swap", "refill"):
             raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
+        if prefill_mode not in ("chunked", "wave"):
+            raise ValueError(
+                f"prefill_mode must be 'chunked' or 'wave', got {prefill_mode}")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.cfg, self.params, self.opts = cfg, params, opts
         self.pool = PagedKVPool(cfg, num_pages=num_pages, page_size=page_size,
                                 max_requests=max_slots, max_seq_len=max_seq_len)
         self.max_slots = max_slots
         self.lazy_growth = lazy_growth
         self.resume = resume
+        self.prefill_mode = prefill_mode
+        # no prompt can exceed the block table's reach, so neither need a chunk
+        self.prefill_chunk = min(prefill_chunk,
+                                 self.pool.max_blocks * page_size)
+        self.preempt_cooldown = preempt_cooldown
+        self._tick = 0
+        self._shapes: set = set()  # distinct jitted call shapes dispatched
         self._swap_bytes = 0
         self.queue: deque = deque()
         self.slots: list = [None] * max_slots
@@ -220,7 +274,8 @@ class Scheduler:
         assert prompt.size >= 1 and max_new_tokens >= 1
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, prompt, max_new_tokens, eos_id, priority=priority)
+        req = Request(rid, prompt, max_new_tokens, eos_id, priority=priority,
+                      submit_tick=self._tick)
         if prefix_key is not None:
             entry = self._prefixes.get(prefix_key)
             if prefix_len is not None:
@@ -264,17 +319,26 @@ class Scheduler:
 
     # ------------------------------------------------------------ lifecycle
 
+    def _register_shape(self, *shape) -> None:
+        """Track every distinct jitted call shape the scheduler dispatches —
+        ``stats.compiled_shapes`` is the compile-count the chunked mode
+        exists to bound."""
+        self._shapes.add(shape)
+        self.stats.compiled_shapes = len(self._shapes)
+
     def _admission_target(self, req: Request) -> int:
         """TOKENS the admission must cover. Reserve mode: the request's
         worst-case final length. Lazy mode: the (re-)prefill/restore length
         plus ONE decode token of headroom (capped at the final written
         length), so an admitted request always decodes at least one token
-        before it can be preempted — the liveness guarantee."""
+        before it can be preempted — the liveness guarantee. A swap
+        snapshot never holds MORE than the (re-)prefill length (a
+        mid-prefill victim holds less — its remaining chunks must still
+        fit), so the prefill length covers both admission paths."""
         final = len(req.prompt) + req.max_new_tokens
         if not self.lazy_growth:
             return final
-        held = req.snapshot["length"] if req.snapshot is not None \
-            else len(req.prefill_tokens)
+        held = len(req.prefill_tokens)
         # final - 1: the last sampled token is emitted, never written back
         return min(held + 1, final - 1)
 
@@ -282,11 +346,19 @@ class Scheduler:
         """Admit queue heads while a slot row and their admission pages fit.
         FIFO: a too-big head blocks the queue (no starvation-prone
         skipping), and a head whose shared prefix is still being prefilled
-        by its creator waits one wave, then forks. Returns
-        (slots needing a prefill, slots restored from a swap snapshot)."""
+        by its creator waits one wave, then forks. A freshly PREEMPTED head
+        additionally waits out its anti-thrash cooldown while its preemptor
+        (or any other slot) runs — re-admitting it on the very next tick
+        would only re-provoke the same exhaustion and evict it again, a
+        swap storm that makes no progress; with every slot idle the
+        cooldown is moot and is ignored. Returns (slots needing a prefill,
+        slots restored from a swap snapshot)."""
         admitted, restored = [], []
         while self.queue:
             req = self.queue[0]
+            if (req.cooldown_until > self._tick
+                    and any(st is not None for st in self.slots)):
+                break
             handle, entry = None, None
             if req.snapshot is None and req.prefix_key is not None:
                 entry = self._prefixes.get(req.prefix_key)
@@ -316,10 +388,37 @@ class Scheduler:
                     entry.creator_rid = req.rid
                 admitted.append(slot)
             self.queue.popleft()
+            # the pool length at admission = tokens already resident (0,
+            # a shared prefix, or a restored snapshot — which for a victim
+            # evicted mid-prefill is less than its prompt: it resumes
+            # CHUNKING right where it left off)
             self.slots[slot] = _SlotState(req, list(req.generated),
-                                          self._admit_seq)
+                                          self._admit_seq,
+                                          prefilled=int(self.pool.lengths[slot]))
             self._admit_seq += 1
         return admitted, restored
+
+    def _record_first_token(self, st: _SlotState, token: int) -> None:
+        """Seed the slot's first sampled token (resumed requests keep their
+        already-emitted tokens — the last one is the next decode input, not
+        a fresh sample) and record its TTFT."""
+        if not st.generated:
+            st.generated.append(token)
+            self.stats.ttft_ticks.setdefault(
+                st.req.rid, self._tick - st.req.submit_tick)
+
+    def _maybe_pin_prefix(self, st: _SlotState, slot: int) -> None:
+        """Pin the shared prefix once its creator has WRITTEN the covered
+        tokens — under chunked prefill that can be mid-prompt, so waiting
+        forks admit as soon as the prefix pages exist, not only after the
+        creator's whole (possibly much longer) prompt lands."""
+        entry = self._prefixes.get(st.req.prefix_key) \
+            if st.req.prefix_key is not None else None
+        if entry is not None and entry.handle is None \
+                and entry.creator_rid == st.req.rid \
+                and st.prefilled >= entry.tokens.size:
+            entry.handle = self.pool.share_prefix(slot, entry.tokens.size)
+            entry.creator_rid = None
 
     def _prefill_wave(self, admitted: list) -> None:
         """One ragged right-aligned prefill over the admitted rows; the last
@@ -337,8 +436,10 @@ class Scheduler:
             suffix = toks[i][starts[i]:]
             tokens[i, s_pad - suffix.size:] = suffix
             posn[i, s_pad - suffix.size:] = np.arange(starts[i], toks[i].size)
-        fn = self._prefill_shared if any(st > 0 for st in starts) \
-            else self._prefill
+        shared = any(st > 0 for st in starts)
+        fn = self._prefill_shared if shared else self._prefill
+        self._register_shape("prefill_shared" if shared else "prefill",
+                             r, s_pad)
         logits, new_caches = fn(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(rows=admitted),
@@ -348,19 +449,68 @@ class Scheduler:
         for i, slot in enumerate(admitted):
             st = self.slots[slot]
             self.pool.commit_prefill(slot, int(toks[i].size))
-            if not st.generated:
-                st.generated.append(int(first[i]))
-            # resumed requests keep their already-emitted tokens: the last
-            # one is the next decode input, not a fresh sample
-            entry = self._prefixes.get(st.req.prefix_key) \
-                if st.req.prefix_key is not None else None
-            if entry is not None and entry.handle is None \
-                    and entry.creator_rid == st.req.rid:
-                entry.handle = self.pool.share_prefix(slot,
-                                                      entry.tokens.size)
-                entry.creator_rid = None
+            st.prefilled = int(toks[i].size)
+            self._record_first_token(st, int(first[i]))
+            self._maybe_pin_prefix(st, slot)
         self.stats.prefills += 1
         self.stats.admitted += r
+
+    def _prefill_chunk_tick(self) -> bool:
+        """Advance every mid-prefill slot by ONE ``prefill_chunk``-token
+        chunk through a FIXED-shape ``(max_slots, chunk)`` call — rows with
+        nothing pending ride along fully padded (their writes trash-route,
+        their attention masks out), so one compiled shape serves every
+        admission state and the tick's latency is bounded by the chunk.
+
+        First chunks (nothing of the request in the pool yet) keep the
+        plain fresh-only attention path — the same math as ``Engine``'s
+        prefill. Continuation chunks and prefix forks attend their pool
+        history through the Pallas page-walk kernel
+        (``models.layers.paged_prefill_attention``) — int8 in place,
+        exactly what their decode steps will read. A chunk whose last
+        token completes the prompt yields the row's first sampled token
+        from the call's last column."""
+        rows = [i for i, st in enumerate(self.slots)
+                if st is not None and st.prefilling]
+        if not rows:
+            return False
+        c = self.prefill_chunk
+        fresh = [i for i in rows if int(self.pool.lengths[i]) == 0]
+        cont = [i for i in rows if int(self.pool.lengths[i]) > 0]
+        for group, fn, kind in ((fresh, self._prefill, "chunk"),
+                                (cont, self._prefill_shared, "chunk_shared")):
+            if not group:
+                continue
+            tokens = np.zeros((self.max_slots, c), np.int32)
+            posn = np.full((self.max_slots, c), -1, np.int32)
+            ends = {}
+            for i in group:
+                st = self.slots[i]
+                toks = st.req.prefill_tokens
+                lo = st.prefilled
+                hi = min(lo + c, toks.size)
+                chunk = toks[lo:hi]
+                tokens[i, c - chunk.size:] = chunk
+                posn[i, c - chunk.size:] = np.arange(lo, hi)
+                ends[i] = (hi, toks.size)
+            self._register_shape(kind, self.max_slots, c)
+            logits, new_caches = fn(
+                self.params, jnp.asarray(tokens),
+                caches=self.pool.device_caches(),
+                positions=jnp.asarray(posn))
+            self.pool.update_from(new_caches)
+            first = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in group:
+                st = self.slots[i]
+                hi, total = ends[i]
+                self.pool.commit_prefill(i, hi)
+                st.prefilled = hi
+                self.stats.prefill_chunks += 1
+                self._maybe_pin_prefix(st, i)
+                if hi == total:  # prompt complete → first token
+                    self._record_first_token(st, int(first[i]))
+            self.stats.prefills += 1
+        return True
 
     def _release_idle_prefix(self) -> bool:
         """Unpin one materialized prefix whose pages nobody but the handle
@@ -397,12 +547,20 @@ class Scheduler:
             return False
         st = self.slots[victim]
         st.req.generated = list(st.generated)
+        # anti-thrash: the victim re-queues but is not re-admitted before
+        # its cooldown elapses while other slots run (see _admit_wave)
+        st.req.cooldown_until = self._tick + 1 + self.preempt_cooldown
         if self.resume == "swap":
             # snapshot only positions actually WRITTEN: the victim may have
             # run its speculative append this very tick (its pending token
             # was never decoded, so its position holds no KV yet) — the
-            # accounted length would bake a permanent hole into the restore
-            written = len(st.req.prompt) + len(st.generated) - 1
+            # accounted length would bake a permanent hole into the restore.
+            # A victim still mid-prefill has written exactly its chunks so
+            # far; its restore resumes chunking from there
+            if st.generated:
+                written = len(st.req.prompt) + len(st.generated) - 1
+            else:
+                written = st.prefilled
             st.req.snapshot = self.pool.export_slot(victim, n_tokens=written)
             self._swap_bytes += sum(a.nbytes
                                     for leaves in st.req.snapshot["data"]
@@ -417,12 +575,14 @@ class Scheduler:
 
     def _decode_tick(self) -> None:
         """One ragged decode step over EVERY slot (single compiled shape);
-        inactive rows carry position -1 and are masked end-to-end. In lazy
-        mode, page-boundary growth that exhausts the pool preempts before
-        the step runs (the victim's un-decoded tick is simply not taken —
-        its resume re-prefills from exactly the tokens it had emitted)."""
+        inactive rows — free slots AND slots still mid-prefill — carry
+        position -1 and are masked end-to-end, so prefill chunks and decode
+        share the tick without sharing a shape. In lazy mode, page-boundary
+        growth that exhausts the pool preempts before the step runs (the
+        victim's un-decoded tick is simply not taken — its resume
+        re-prefills from exactly the tokens it had emitted)."""
         for i in range(self.max_slots):
-            if self.slots[i] is None:
+            if self.slots[i] is None or self.slots[i].prefilling:
                 continue
             while True:
                 try:
@@ -436,9 +596,11 @@ class Scheduler:
                             f"cannot hold its worst case even alone")
                     if self.slots[i] is None:
                         break  # we were the victim; skip our own step
-        active = [i for i, st in enumerate(self.slots) if st is not None]
+        active = [i for i, st in enumerate(self.slots)
+                  if st is not None and not st.prefilling]
         if not active:
             return
+        self._register_shape("decode", self.max_slots, 1)
         tokens = np.zeros((self.max_slots, 1), np.int32)
         pos = np.full((self.max_slots,), -1, np.int32)
         for i in active:
@@ -484,29 +646,40 @@ class Scheduler:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
     def step(self) -> bool:
-        """One scheduler tick: admit+prefill a wave, evict anything that
-        finished on its prefill token, decode the ragged batch, evict.
-        Returns whether work remains."""
+        """One scheduler tick: admit, advance prefill (one fixed-size chunk
+        per mid-prefill slot, or the full wave in "wave" mode), evict
+        anything that finished on its prefill token, decode the ragged
+        batch, evict. Returns whether work remains."""
+        self._tick += 1
         admitted, restored = self._admit_wave()
-        if admitted:
-            # prefill fresh rows and forked rows separately: the shared
-            # path's full-pool history gather is paid only by rows that
-            # actually attend history
-            fresh = [s for s in admitted if int(self.pool.lengths[s]) == 0]
-            forked = [s for s in admitted if int(self.pool.lengths[s]) > 0]
-            for group in (fresh, forked):
-                if group:
-                    self._prefill_wave(group)
-            self._track_occupancy()
-            self._evict_finished()  # max_new_tokens == 1 finishes here
         if restored:
             self.stats.admitted += len(restored)
+        did_prefill = False
+        if self.prefill_mode == "wave":
+            if admitted:
+                # prefill fresh rows and forked rows separately: the shared
+                # path's full-pool history walk is paid only by rows that
+                # actually attend history
+                fresh = [s for s in admitted
+                         if int(self.pool.lengths[s]) == 0]
+                forked = [s for s in admitted
+                          if int(self.pool.lengths[s]) > 0]
+                for group in (fresh, forked):
+                    if group:
+                        self._prefill_wave(group)
+                did_prefill = True
+        else:
+            self.stats.admitted += len(admitted)
+            did_prefill = self._prefill_chunk_tick()
+        if did_prefill or restored:
             self._track_occupancy()
-        if any(s is not None for s in self.slots):
+            self._evict_finished()  # max_new_tokens == 1 finishes here
+        if any(st is not None and not st.prefilling for st in self.slots):
             self._decode_tick()
             self._track_occupancy()
             self._evict_finished()
-        elif not admitted and not restored and self.queue:
+        elif (not admitted and not restored and self.queue
+              and all(st is None for st in self.slots)):
             # idle batch yet the head still doesn't fit: release an idle
             # pinned prefix and retry; if nothing is releasable it never
             # will fit — fail loudly instead of spinning forever
