@@ -15,15 +15,27 @@ pool (worst-case admission, kernels in interpret mode off-TPU):
   * dense_gather — chunked scheduling but
     ``RuntimeOpts(paged_prefill_kernel=False)``: continuation chunks gather
     the WHOLE pool dense and dequantize it per layer (the pre-kernel path)
-    — isolating the kernel's contribution from the scheduler's.
+    — isolating the kernel's contribution from the scheduler's;
+  * auto         — ``prefill_chunk=(CHUNK//4, CHUNK//2, CHUNK)``: the
+    ADAPTIVE ladder picks the chunk per tick — large while the batch is
+    prefill-heavy, small once decode slots dominate (or an
+    ``interactive`` latency hint objects) — trading a bounded extra
+    compile count (one per rung) for a shorter TAIL TICK while decodes
+    co-reside with a long admitting prompt. ``auto_chunks`` in the JSON
+    records the per-rung tick counts.
 
 Reported per mix/variant: wall TTFT (mean/max over requests) and TTFT in
 scheduler ticks, the TAIL tick latency (the longest single tick — what a
 co-resident decode request experiences while a prompt admits), tokens/s,
 the distinct-jit-shape count, and greedy parity vs per-request
-``Engine.generate``. CPU wall numbers are call-path + compile-churn
-comparisons, not TPU performance; the tick/shape columns are exact on any
-backend. JSON artifact under experiments/chunked_prefill/.
+``Engine.generate`` (``outputs_match_baseline`` plus per-token
+``token_agreement``: multi-chunk prefill is documented as bit-TOLERANT —
+page-walk fp reassociation — and smaller chunk rungs re-associate more,
+so a near-tie greedy argmax can flip on some prompt mixes; the agreement
+column records how close a non-exact run stays). CPU wall numbers are
+call-path + compile-churn comparisons, not TPU performance; the
+tick/shape columns are exact on any backend. JSON artifact under
+experiments/chunked_prefill/.
 
   PYTHONPATH=src python -m benchmarks.chunked_prefill [--smoke]
 
@@ -78,11 +90,13 @@ def _serve(cfg, params, opts, jobs, prompts, variant, pages):
     mode = "wave" if variant == "wave" else "chunked"
     if variant == "dense_gather":
         opts = dataclasses.replace(opts, paged_prefill_kernel=False)
+    chunk = (max(1, CHUNK // 4), max(1, CHUNK // 2), CHUNK) \
+        if variant == "auto" else CHUNK
     max_seq = max(n + mn for n, mn in jobs)
     sched = Scheduler(cfg, params, opts, num_pages=pages,
                       page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
                       max_seq_len=max_seq, prefill_mode=mode,
-                      prefill_chunk=CHUNK)
+                      prefill_chunk=chunk)
     rids = [sched.submit(p, mn) for p, (_, mn) in zip(prompts, jobs)]
     first_wall: dict = {}
     tick_walls = []
@@ -118,6 +132,8 @@ def _serve(cfg, params, opts, jobs, prompts, variant, pages):
         "prefill_calls": sched.stats.prefills,
         "prefill_chunks": sched.stats.prefill_chunks,
         "compiled_shapes": sched.stats.compiled_shapes,
+        "auto_chunks": {int(k): v
+                        for k, v in sorted(sched.stats.auto_chunks.items())},
     }
 
 
@@ -139,11 +155,15 @@ def bench_chunked_prefill(smoke: bool = False):
         want = [eng.generate(p[None], mn).tokens[0]
                 for p, (_, mn) in zip(prompts, jobs)]
         entry = {"requests": len(jobs)}
-        for variant in ("wave", "chunked", "dense_gather"):
+        for variant in ("wave", "chunked", "dense_gather", "auto"):
             results, rids, m = _serve(cfg, params, opts, jobs, prompts,
                                       variant, mix["pages"])
             m["outputs_match_baseline"] = all(
                 np.array_equal(results[r], w) for r, w in zip(rids, want))
+            gen = [(results[r][n:], w[n:])
+                   for r, w, (n, _) in zip(rids, want, jobs)]
+            m["token_agreement"] = round(float(np.mean(
+                [np.mean(g == w) for g, w in gen])), 3)
             entry[variant] = m
             rows.append((f"chunked_prefill/{name}_{variant}",
                          m["wall_s"] * 1e6,
@@ -156,6 +176,9 @@ def bench_chunked_prefill(smoke: bool = False):
         entry["tail_tick_reduction_vs_wave"] = round(
             entry["wave"]["tail_tick_s"]
             / max(entry["chunked"]["tail_tick_s"], 1e-9), 2)
+        entry["tail_tick_reduction_auto_vs_chunked"] = round(
+            entry["chunked"]["tail_tick_s"]
+            / max(entry["auto"]["tail_tick_s"], 1e-9), 2)
         rec[name] = entry
         rows.append((f"chunked_prefill/{name}_ttft_reduction", 0.0,
                      entry["ttft_reduction_vs_wave"]))

@@ -21,12 +21,14 @@ def _registry():
     from benchmarks.prefix_sharing import bench_prefix_sharing
     from benchmarks.ragged_batch import bench_ragged_batch
     from benchmarks.roofline_report import bench_roofline
+    from benchmarks.sampling_api import bench_sampling_api
 
     return {
         "chunked_prefill": bench_chunked_prefill,
         "decode_path": bench_decode_path,
         "prefix_sharing": bench_prefix_sharing,
         "ragged_batch": bench_ragged_batch,
+        "sampling_api": bench_sampling_api,
         "fig5": pb.bench_fig5_server_scaling,
         "fig6": pb.bench_fig6_payload_size,
         "fig7": pb.bench_fig7_ts_ratio,

@@ -1,0 +1,182 @@
+"""sampling_api benchmark: per-request sampling on the paged backend —
+greedy vs temperature vs top-p throughput through ONE compiled shape —
+plus the three-backend smoke drive of the request-level API.
+
+The point being measured: the scheduler's decode tick jits
+``paged_decode_step`` + the shared ``core.sampling.sample_tokens`` as one
+function with per-slot traced operands, so switching a request mix from
+greedy to temperature to nucleus sampling changes ZERO compiled shapes —
+the ``compiled_shapes`` column must be constant across variants (asserted
+here), and the throughput delta is the sampler's arithmetic only.
+
+Per variant: wall time, tokens/s, scheduler ticks, distinct jitted
+shapes, and (greedy) parity vs per-request ``Engine.generate``. CPU wall
+numbers are call-path comparisons, not TPU performance; the shape/parity
+columns are exact on any backend. JSON under ``experiments/sampling_api/``.
+
+  PYTHONPATH=src python -m benchmarks.sampling_api [--smoke]
+
+``--smoke`` (the CI serving-api smoke step) also drives one request
+through EACH backend — fused, paged, split — via ``LLMServer`` and
+checks the greedy outputs agree bit-for-bit where the backends share a
+numeric path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "sampling_api")
+
+JOBS = [(6, 12), (10, 8), (4, 14), (8, 10), (5, 12), (7, 8)]
+SMOKE_JOBS = [(5, 6), (7, 4)]
+PAGE_SIZE = 4
+MAX_SLOTS = 3
+
+VARIANTS = {
+    "greedy": lambda mt, i: dict(max_tokens=mt),
+    "temperature": lambda mt, i: dict(max_tokens=mt, temperature=0.8,
+                                      seed=100 + i),
+    "top_p": lambda mt, i: dict(max_tokens=mt, temperature=0.9, top_p=0.9,
+                                seed=200 + i),
+    "top_k": lambda mt, i: dict(max_tokens=mt, temperature=1.1, top_k=8,
+                                seed=300 + i),
+}
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import RuntimeOpts, init_params
+
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opts = RuntimeOpts(q_chunk=16, kv_chunk=32, remat=False,
+                       quantized_kv=True, moe_capacity_factor=0.0)
+    return cfg, params, opts
+
+
+def _serve_paged(cfg, params, opts, jobs, prompts, variant):
+    from repro.core.sampling import SamplingParams
+    from repro.serving import LLMServer
+
+    srv = LLMServer(cfg, params, opts, backend="paged",
+                    num_pages=48, page_size=PAGE_SIZE, max_slots=MAX_SLOTS)
+    sps = [SamplingParams(**VARIANTS[variant](mn, i))
+           for i, (_, mn) in enumerate(jobs)]
+    t0 = time.time()
+    rids = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+    outs = srv.run()
+    wall = time.time() - t0
+    sched = srv.backend.scheduler
+    total = sum(outs[r].tokens.shape[0] for r in rids)
+    return outs, rids, {
+        "wall_s": round(wall, 3),
+        "tokens": total,
+        "tokens_per_s": round(total / wall, 2),
+        "ticks": sched.stats.steps,
+        "compiled_shapes": sched.stats.compiled_shapes,
+    }
+
+
+def _smoke_three_backends(cfg, params, opts):
+    """One greedy request through each backend via the SAME GenerationRequest
+    surface — the CI drive for the API facade."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.opsc import OPSCConfig
+    from repro.core.sampling import SamplingParams
+    from repro.serving import Engine, LLMServer
+
+    rng = np.random.default_rng(0)
+    p = rng.integers(0, cfg.vocab_size, (6,))
+    sp = SamplingParams(max_tokens=5)
+    want = Engine(cfg, params, opts, cache_len=32).generate(p[None],
+                                                            5).tokens[0]
+    rows = []
+    for name, srv in (
+            ("paged", LLMServer(cfg, params, opts, backend="paged",
+                                num_pages=16, page_size=4, max_slots=2)),
+            ("fused", LLMServer(cfg, params, opts, backend="fused",
+                                cache_len=32)),
+            ("split", LLMServer(
+                cfg, params,
+                dataclasses.replace(opts, quantized_kv=False),
+                backend="split", compress=False, cache_len=32,
+                opsc=OPSCConfig(split_layer=1, qw_front=16, i_kv=1)))):
+        t0 = time.time()
+        rid = srv.submit(p, sp)
+        out = srv.run()[rid]
+        ok = bool(np.array_equal(out.full_tokens, want)) \
+            if name in ("paged", "fused") else out.finished
+        assert out.finish_reason == "length", (name, out.finish_reason)
+        if name in ("paged", "fused"):
+            assert ok, f"{name} default params diverged from greedy Engine"
+        rows.append((f"sampling_api/smoke_{name}",
+                     (time.time() - t0) * 1e6,
+                     f"tokens={out.tokens.shape[0]} "
+                     f"reason={out.finish_reason} greedy_match={ok}"))
+    return rows
+
+
+def bench_sampling_api(smoke: bool = False):
+    import numpy as np
+
+    from repro.serving import Engine
+
+    cfg, params, opts = _build()
+    jobs = SMOKE_JOBS if smoke else JOBS
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n, _ in jobs]
+    rows, rec = [], {"config": {"arch": cfg.name, "jobs": jobs,
+                                "page_size": PAGE_SIZE,
+                                "max_slots": MAX_SLOTS, "smoke": smoke}}
+    eng = Engine(cfg, params, opts, cache_len=64)
+    want = [eng.generate(p[None], mn).tokens[0]
+            for p, (_, mn) in zip(prompts, jobs)]
+    shapes = {}
+    for variant in VARIANTS:
+        outs, rids, m = _serve_paged(cfg, params, opts, jobs, prompts,
+                                     variant)
+        if variant == "greedy":
+            m["outputs_match_baseline"] = all(
+                np.array_equal(outs[r].full_tokens, w)
+                for r, w in zip(rids, want))
+        shapes[variant] = m["compiled_shapes"]
+        rec[variant] = m
+        rows.append((f"sampling_api/{variant}", m["wall_s"] * 1e6,
+                     f"tok/s={m['tokens_per_s']} "
+                     f"shapes={m['compiled_shapes']}"))
+    assert len(set(shapes.values())) == 1, \
+        f"sampling params changed the compiled shapes: {shapes}"
+    rec["one_compiled_shape_across_variants"] = True
+    if smoke:
+        rows += _smoke_three_backends(cfg, params, opts)
+        rec["three_backend_smoke"] = "passed"
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "sampling_api_smoke.json" if smoke
+                       else "sampling_api.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small mix + one request through each backend "
+                         "(CI serving-api smoke step)")
+    args = ap.parse_args()
+    for name, us, derived in bench_sampling_api(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

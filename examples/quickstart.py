@@ -1,5 +1,6 @@
 """Quickstart: train a tiny LM on the synthetic Zipf–Markov corpus, then
-serve it with the batched engine.
+serve it through the request-level API (``LLMServer`` over the paged
+continuous-batching backend, with a non-greedy sampled request mixed in).
 
   PYTHONPATH=src python examples/quickstart.py [--steps 150] [--smoke]
 
@@ -17,7 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.pipeline import ZipfMarkov, lm_loader
 from repro.models.transformer import RuntimeOpts
-from repro.serving.engine import Engine
+from repro.serving import LLMServer, SamplingParams
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import TrainConfig, train
 
@@ -44,13 +45,27 @@ def main():
     params, _, hist = train(cfg, loader, tc, opts, log_every=25)
     print(f"[quickstart] ce {hist[0]['ce']:.3f} → {hist[-1]['ce']:.3f}")
 
-    engine = Engine(cfg, params, opts, cache_len=128)
+    # one request-level API over every backend; here: the paged
+    # continuous-batching scheduler, mixing greedy and sampled requests
+    # in one ragged batch (per-request knobs are traced operands — one
+    # compiled decode shape serves the whole mix)
+    server = LLMServer(cfg, params, opts, backend="paged",
+                       num_pages=64, page_size=8, max_slots=4)
     rng = np.random.default_rng(0)
     prompts = corpus.sample(rng, batch=4, seq=16).astype(np.int32)
-    result = engine.generate(prompts, max_new_tokens=8 if args.smoke else 24)
-    print("[quickstart] generated continuations:")
-    for row in result.tokens:
-        print("  ", row[:16].tolist(), "→", row[16:].tolist())
+    max_tokens = 8 if args.smoke else 24
+    rids = [server.submit(p, SamplingParams(
+        max_tokens=max_tokens,
+        temperature=0.0 if i < 3 else 0.8,  # last request samples
+        seed=i)) for i, p in enumerate(prompts)]
+    outputs = server.run()
+    print("[quickstart] generated continuations (last row sampled at "
+          "temperature 0.8):")
+    for rid in rids:
+        out = outputs[rid]
+        print("  ", out.prompt.tolist(), "→", out.tokens.tolist(),
+              f"[{out.finish_reason}, {out.tokens.size} tokens, "
+              f"ttft {out.metrics.ttft_ticks} ticks]")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,9 @@ from repro.core.payload import Payload, decode, encode, encode_decode_ste
 from repro.core.quant import (QuantizedTensor, aiq, aiq_dequant, atom_lite,
                               omniquant_lite, pack_int4, quantize_groupwise,
                               quantize_sym, smoothquant_lite, unpack_int4)
+from repro.core.sampling import (SamplingParams, broadcast_params,
+                                 device_operands, sample_tokens,
+                                 sampling_operands, truncate_at_stop)
 from repro.core.split_optimizer import (SplitSearchSpace, SplitSolution,
                                         optimize_split, psi)
 from repro.core.tabq import TabQResult, tabq, tabq_fixed

@@ -1,0 +1,207 @@
+"""Shared on-device batched sampler: per-request temperature / top-k /
+top-p with per-request PRNG lanes, in ONE compiled shape.
+
+This is the sampling half of the request-level serving API
+(``repro.serving.api``): every backend — the fused ``Engine`` scan, the
+paged ``Scheduler`` decode tick, and the ``SplitEngine`` cloud loop —
+samples through :func:`sample_tokens`, so a request's token stream is a
+function of (its logits, its seed, its generation index) ONLY:
+
+  * every per-request knob is a TRACED per-row operand (``temperature``/
+    ``top_p`` f32, ``top_k`` int32, a (2,) uint32 PRNG key per row), so a
+    batch mixing greedy, temperature and nucleus requests shares one
+    compiled shape — no per-request recompiles, no host round-trip;
+  * randomness is keyed per ROW and folded with the row's own generation
+    index (``fold_in(key_r, t_r)``), never with a batch-wide step counter —
+    a request sampled in slot 3 of a ragged batch draws exactly the bits it
+    would draw alone, which is what makes the paged scheduler reproduce the
+    fused engine token-for-token under the same per-request seeds;
+  * the GREEDY LANE IS EXACT: rows with ``temperature <= 0`` or
+    ``top_k == 1`` take a plain ``argmax`` selected by ``jnp.where`` — the
+    same integers the pre-sampler host ``np.argmax`` produced, bit for bit
+    (the greedy-equivalence regression in ``tests/test_serving_api.py``).
+
+:class:`SamplingParams` (the request-level dataclass the serving API
+passes around) lives here rather than in ``serving.api`` so the scheduler
+can depend on it without importing the API layer that wraps it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# finite mask value: -inf arithmetic breeds NaNs under jnp.where once two
+# masked lanes are subtracted; anything below any real logit works
+NEG_INF = -1e30
+
+_LATENCY_HINTS = ("interactive", "balanced", "batch")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation parameters — the one knob object of the
+    serving API (``repro.serving.api``).
+
+    Defaults are GREEDY and must reproduce the pre-API engines bit for bit
+    on every backend (the regression ``tests/test_serving_api.py`` pins it).
+
+    ``temperature <= 0`` or ``top_k == 1`` selects the exact argmax lane;
+    ``top_k = 0`` disables the top-k filter, ``top_p = 1.0`` disables the
+    nucleus filter. ``stop_token_ids`` and ``eos_id`` together form
+    :meth:`stop_set`: generation finishes (reason ``"stop"``) the moment a
+    sampled token lands in it, and the output is truncated at that token
+    inclusive. ``priority`` orders preemption victims in the paged
+    scheduler's lazy mode (lower evicts first); ``prefix_key`` /
+    ``prefix_len`` declare a shared prompt prefix exactly like
+    ``Scheduler.submit``. ``latency_hint`` feeds the scheduler's adaptive
+    prefill chunking (``prefill_chunk="auto"``): ``"interactive"`` pulls
+    chunk sizes down while this request decodes (tail latency),
+    ``"batch"`` tolerates big chunks (throughput)."""
+
+    max_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    stop_token_ids: tuple = ()
+    eos_id: int | None = None
+    priority: int = 0
+    prefix_key: object = None
+    prefix_len: int | None = None
+    latency_hint: str = "balanced"
+
+    def __post_init__(self):
+        if self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 disables), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.latency_hint not in _LATENCY_HINTS:
+            raise ValueError(f"latency_hint must be one of {_LATENCY_HINTS}, "
+                             f"got {self.latency_hint!r}")
+        # frozen dataclass: normalize via object.__setattr__, and cache the
+        # derived stop set once — done() checks it per slot per tick
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+        s = frozenset(self.stop_token_ids)
+        if self.eos_id is not None:
+            s |= {int(self.eos_id)}
+        object.__setattr__(self, "_stop_set", s)
+
+    @property
+    def greedy(self) -> bool:
+        """Whether this request takes the exact-argmax lane."""
+        return self.temperature <= 0.0 or self.top_k == 1
+
+    @property
+    def stop_set(self) -> frozenset:
+        """Tokens that finish the request (``eos_id`` included)."""
+        return self._stop_set
+
+
+def sampling_operands(params_list) -> dict:
+    """Stack a list of :class:`SamplingParams` into the per-row device
+    operands :func:`sample_tokens` consumes: ``keys`` (R, 2) uint32 (one
+    ``PRNGKey(seed)`` per row), ``temperature``/``top_p`` (R,) f32,
+    ``top_k`` (R,) int32. Host-side numpy — callers move them to device
+    inside their own jit boundaries."""
+    return {
+        "keys": np.stack([np.asarray(jax.random.PRNGKey(p.seed), np.uint32)
+                          for p in params_list]),
+        "temperature": np.asarray([p.temperature for p in params_list],
+                                  np.float32),
+        "top_k": np.asarray([p.top_k for p in params_list], np.int32),
+        "top_p": np.asarray([p.top_p for p in params_list], np.float32),
+    }
+
+
+def broadcast_params(sampling, batch: int) -> list:
+    """Normalize a per-batch ``sampling`` argument — one
+    :class:`SamplingParams` (applied to every row) or a sequence of
+    ``batch`` — into a validated list. The one place the broadcast rule
+    lives for every backend."""
+    lst = [sampling] * batch if isinstance(sampling, SamplingParams) \
+        else list(sampling)
+    if len(lst) != batch:
+        raise ValueError(f"need one SamplingParams per row: got {len(lst)} "
+                         f"for batch {batch}")
+    return lst
+
+
+def device_operands(params_list) -> tuple:
+    """:func:`sampling_operands` as device arrays, in
+    :func:`sample_tokens` argument order: (keys, temperature, top_k,
+    top_p)."""
+    o = sampling_operands(params_list)
+    return (jnp.asarray(o["keys"]), jnp.asarray(o["temperature"]),
+            jnp.asarray(o["top_k"]), jnp.asarray(o["top_p"]))
+
+
+def truncate_at_stop(tokens, params: SamplingParams) -> tuple:
+    """Truncate ``tokens`` at the first stop-set token (INCLUSIVE) →
+    ``(tokens as a python int list, finish_reason)`` with reason ``"stop"``
+    when a stop token fired, ``"length"`` otherwise. The one output-shaping
+    rule shared by every backend (``serving.api`` replay truncation and
+    the paged scheduler's eviction) — change it here, not per backend."""
+    toks = [int(tok) for tok in tokens]
+    stop = params.stop_set
+    if stop:
+        for j, tok in enumerate(toks):
+            if tok in stop:
+                return toks[: j + 1], "stop"
+    return toks, "length"
+
+
+def sample_tokens(logits, keys, t, temperature, top_k, top_p):
+    """Sample one token per row, all rows in one compiled shape.
+
+    ``logits`` (R, V) — any float dtype, promoted to f32; ``keys`` (R, 2)
+    uint32 per-request PRNG keys; ``t`` (R,) int32 per-row generation index
+    (folded into the row's key, so the draw depends on the row's own stream
+    position, not on batch composition or a global step counter);
+    ``temperature``/``top_p`` (R,) f32; ``top_k`` (R,) int32, 0 = disabled.
+
+    Rows with ``temperature <= 0`` or ``top_k == 1`` return the exact
+    ``argmax`` (greedy lane). The rest are filtered to the intersection of
+    the top-k and nucleus sets (ties at either cutoff are kept — at least
+    the argmax token always survives) and sampled from the renormalized
+    distribution at their temperature. When EVERY row is greedy — the
+    default workload — a ``lax.cond`` skips the sort/softmax/categorical
+    arithmetic at runtime entirely (same compiled shape, argmax-only
+    cost). Returns (R,) int32."""
+    logits = logits.astype(jnp.float32)
+    r, v = logits.shape
+    greedy_tok = jnp.argmax(logits, axis=-1)
+    use_greedy = (temperature <= 0.0) | (top_k == 1)
+
+    def non_greedy(_):
+        safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+        z = logits / safe_t[:, None]
+        sz = jnp.flip(jnp.sort(z, axis=-1), axis=-1)  # per-row descending
+        # top-k cutoff: k-th largest scaled logit (k=0 disables → keep all)
+        k = jnp.where(top_k <= 0, v, jnp.minimum(top_k, v)).astype(jnp.int32)
+        kth = jnp.take_along_axis(sz, (k - 1)[:, None], axis=-1)[:, 0]
+        # nucleus cutoff: in sorted order keep rows whose EXCLUSIVE
+        # cumulative probability is < top_p (the smallest set whose mass
+        # reaches top_p; the top-1 token is always kept)
+        probs = jax.nn.softmax(sz, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1) - probs
+        keep = cum < top_p[:, None]
+        keep = keep.at[:, 0].set(True)
+        n_keep = jnp.sum(keep, axis=-1).astype(jnp.int32)
+        pth = jnp.take_along_axis(sz, (n_keep - 1)[:, None], axis=-1)[:, 0]
+
+        cutoff = jnp.maximum(kth, pth)
+        masked = jnp.where(z >= cutoff[:, None], z, NEG_INF)
+        step_keys = jax.vmap(jax.random.fold_in)(
+            jnp.asarray(keys, jnp.uint32), jnp.maximum(jnp.asarray(t), 0))
+        return jax.vmap(jax.random.categorical)(step_keys, masked)
+
+    sampled = jax.lax.cond(jnp.all(use_greedy),
+                           lambda _: greedy_tok, non_greedy, None)
+    return jnp.where(use_greedy, greedy_tok, sampled).astype(jnp.int32)

@@ -1,7 +1,19 @@
-"""Serving: batched engine, split-computing engine, and the paged-KV
-continuous-batching stack (``kv_pool`` + ``scheduler``) for ragged
-multi-request decode from one shared memory pool — see README.md here."""
+"""Serving: ONE request-level API (``api.LLMServer`` + ``SamplingParams``
++ streaming ``RequestOutput``) over three pluggable backends — the fused
+static-batch engine, the paged continuous-batching scheduler, and the
+split-computing engine — see README.md here.
 
+The legacy entry points (``Engine.generate``, ``Scheduler.submit``/
+``run``, ``SplitEngine.generate``) keep working unchanged and stay
+exported below, but new call sites should go through ``LLMServer`` —
+``MIGRATION.md`` at the repo root maps the old surfaces onto it.
+"""
+
+from repro.core.sampling import SamplingParams  # noqa: F401
+from repro.serving.api import (FusedBackend, GenerationRequest,  # noqa: F401
+                               LLMServer, PagedBackend, RequestMetrics,
+                               RequestOutput, ServingBackend, SplitBackend,
+                               TokenEvent)
 from repro.serving.engine import Engine, GenerationResult  # noqa: F401
 from repro.serving.kv_pool import (PagedKVPool,  # noqa: F401
                                    PoolExhaustedError)

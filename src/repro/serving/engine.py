@@ -22,6 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.sampling import (broadcast_params, device_operands,
+                                 sample_tokens)
 from repro.models.transformer import RuntimeOpts, decode_step, prefill
 
 
@@ -29,6 +31,33 @@ from repro.models.transformer import RuntimeOpts, decode_step, prefill
 class GenerationResult:
     tokens: np.ndarray  # (B, prompt + generated)
     steps: int
+
+
+def _fused_generate(params, cfg, opts, cache_len, max_new, tokens, patches,
+                    sample):
+    """The fused-loop scaffold both compile paths share: one prefill, a
+    ``lax.scan`` of ``max_new - 1`` decode steps whose carry is (logits,
+    caches, pos), and ``sample(logits, t)`` — t the 0-based index of the
+    token being drawn — called inside the scan so nothing crosses to the
+    host between steps. Returns (B, prompt + max_new) tokens."""
+    b, s = tokens.shape[:2]
+    logits, caches = prefill(params, cfg, tokens, patches, cache_len, opts)
+
+    def body(carry, t):
+        logits, caches, pos = carry
+        nxt = sample(logits, t)
+        tok = nxt[:, None].astype(tokens.dtype)
+        logits, caches = decode_step(params, cfg, tok, caches, pos, opts)
+        return (logits, caches, pos + 1), nxt
+
+    # max_new - 1 decode steps; the last sampled token needs no step
+    (logits, caches, _), toks = jax.lax.scan(
+        body, (logits, caches, jnp.int32(s)),
+        jnp.arange(max_new - 1, dtype=jnp.int32))
+    last = sample(logits, jnp.int32(max_new - 1))
+    toks = jnp.concatenate([toks, last[None]], axis=0)
+    toks = jnp.moveaxis(toks, 0, 1).astype(tokens.dtype)
+    return jnp.concatenate([tokens, toks], axis=1)
 
 
 class Engine:
@@ -63,35 +92,80 @@ class Engine:
         max_new = int(max_new_tokens)
 
         def fn(params, tokens, patches, rng, temperature):
-            def sample(logits, step_key):
+            keys = jax.random.split(rng, max_new)
+
+            def sample(logits, t):  # (B,) or (B, K)
                 if greedy:
                     return jnp.argmax(logits, axis=-1)
                 return jax.random.categorical(
-                    step_key, logits / temperature, axis=-1)
+                    keys[t], logits / temperature, axis=-1)
 
-            b, s = tokens.shape[:2]
-            logits, caches = prefill(params, cfg, tokens, patches, cache_len,
-                                     opts)
-            keys = jax.random.split(rng, max_new)
-
-            def body(carry, step_key):
-                logits, caches, pos = carry
-                nxt = sample(logits, step_key)  # (B,) or (B, K)
-                tok = nxt[:, None].astype(tokens.dtype)
-                logits, caches = decode_step(params, cfg, tok, caches, pos,
-                                             opts)
-                return (logits, caches, pos + 1), nxt
-
-            # max_new - 1 decode steps; the last sampled token needs no step
-            (logits, caches, _), toks = jax.lax.scan(
-                body, (logits, caches, jnp.int32(s)), keys[:-1])
-            last = sample(logits, keys[-1])
-            toks = jnp.concatenate([toks, last[None]], axis=0)
-            toks = jnp.moveaxis(toks, 0, 1).astype(tokens.dtype)
-            return jnp.concatenate([tokens, toks], axis=1)
+            return _fused_generate(params, cfg, opts, cache_len, max_new,
+                                   tokens, patches, sample)
 
         self._gen_fns[key] = jax.jit(fn)
         return self._gen_fns[key]
+
+    def request_fn(self, max_new_tokens: int, greedy: bool = True):
+        """The PER-REQUEST fused loop behind the serving API
+        (``serving.api.LLMServer`` fused backend): same jitted
+        prefill + ``lax.scan`` as :meth:`generate_fn`, but sampling runs
+        through the shared ``core.sampling.sample_tokens`` with PER-ROW
+        operands — ``fn(params, tokens, patches, keys (B, 2) uint32,
+        temperature (B,), top_k (B,), top_p (B,))`` — so one compile
+        serves any mix of per-request temperatures / top-k / top-p, and
+        each row's PRNG lane is its own key folded with its generation
+        index (the exact stream the paged scheduler draws for the same
+        seed — fused/paged sampling parity). ``greedy=True`` compiles the
+        pure-argmax scan (identical tokens to :meth:`generate_fn`
+        greedy, bit for bit)."""
+        assert max_new_tokens >= 1, "the fused loop samples at least one token"
+        key = ("req", int(max_new_tokens), bool(greedy), int(self.cache_len),
+               self.opts)
+        if key in self._gen_fns:
+            return self._gen_fns[key]
+        cfg, opts, cache_len = self.cfg, self.opts, self.cache_len
+        max_new = int(max_new_tokens)
+
+        def fn(params, tokens, patches, keys, temperature, top_k, top_p):
+            b = tokens.shape[0]
+
+            def sample(logits, t):
+                if greedy:
+                    return jnp.argmax(logits, axis=-1)
+                return sample_tokens(logits, keys,
+                                     jnp.full((b,), t, jnp.int32),
+                                     temperature, top_k, top_p)
+
+            return _fused_generate(params, cfg, opts, cache_len, max_new,
+                                   tokens, patches, sample)
+
+        self._gen_fns[key] = jax.jit(fn)
+        return self._gen_fns[key]
+
+    def generate_requests(self, prompts: np.ndarray,
+                          sampling) -> GenerationResult:
+        """Serve a batch of equal-length prompts with PER-REQUEST
+        :class:`~repro.core.sampling.SamplingParams` through the fused
+        scan. ``sampling`` is one ``SamplingParams`` (applied to every
+        row) or a list of ``len(prompts)``. The scan runs to the batch's
+        LARGEST ``max_tokens``; per-row ``max_tokens`` and stop-token
+        truncation are the caller's concern (``serving.api`` does both).
+        All-greedy batches compile the pure-argmax scan — bit-identical
+        to :meth:`generate` at ``temperature=0``."""
+        tokens = jnp.asarray(prompts)
+        b, s = tokens.shape[:2]
+        sampling = broadcast_params(sampling, b)
+        max_new = max(p.max_tokens for p in sampling)
+        assert s + max_new <= self.cache_len, "cache_len too small"
+        if any(not p.greedy for p in sampling) and tokens.ndim != 2:
+            raise NotImplementedError(
+                "non-greedy sampling needs (B, S) token prompts")
+        bucket = min(1 << (max_new - 1).bit_length(), self.cache_len - s)
+        fn = self.request_fn(bucket, greedy=all(p.greedy for p in sampling))
+        keys, temp, tk, tp = device_operands(sampling)
+        out = fn(self.params, tokens, None, keys, temp, tk, tp)
+        return GenerationResult(np.asarray(out[:, : s + max_new]), max_new)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  temperature: float = 0.0, patches=None, seed: int = 0,

@@ -75,12 +75,25 @@ Lifecycle per request (see ``serving/README.md``):
             prefix pages survive for the next fork) and the next admit
             reuses them
 
-The decode loop is host-orchestrated (greedy argmax on host): what this
-scheduler buys is MEMORY — shared prefixes are resident once however many
-requests attach, residency is bounded by what the CURRENTLY resident
-requests actually use (lazy mode), reclaimed the tick each finishes —
-and admission latency, not per-step dispatch. The fused single-batch scan
-in ``serving.engine`` remains the static-batch fast path.
+Sampling is ON DEVICE and PER REQUEST: the decode tick jits
+``paged_decode_step`` + ``core.sampling.sample_tokens`` as one function —
+per-slot temperature / top-k / top-p operands, a per-request PRNG lane
+folded with the row's own generation index, inactive rows masked — so a
+batch mixing greedy and non-greedy requests runs through ONE compiled
+shape (no per-request recompiles, no per-step host argmax; only the
+sampled token ids cross to the host for bookkeeping). Greedy rows
+(``temperature <= 0`` or ``top_k == 1``) take the exact argmax lane.
+Per-request STOP-TOKEN SETS (``SamplingParams.stop_set``) finish a
+request mid-stream, and ``abort(rid)`` cancels one wherever it is —
+queued, mid-prefill, or decoding. Per-token events stream out through
+``drain_events()`` (consumed by ``serving.api.LLMServer``).
+
+The tick loop itself stays host-orchestrated: what this scheduler buys is
+MEMORY — shared prefixes are resident once however many requests attach,
+residency is bounded by what the CURRENTLY resident requests actually use
+(lazy mode), reclaimed the tick each finishes — and admission latency,
+not per-step dispatch. The fused single-batch scan in ``serving.engine``
+remains the static-batch fast path.
 """
 
 from __future__ import annotations
@@ -93,10 +106,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.sampling import (SamplingParams, sample_tokens,
+                                 truncate_at_stop)
 from repro.models.transformer import (RuntimeOpts, paged_decode_step,
                                       paged_prefill, paged_prefill_shared)
 from repro.serving.kv_pool import (DEFAULT_PAGE_SIZE, PagedKVPool,
                                    PoolExhaustedError, SharedPrefix)
+
+# the adaptive-prefill ladder ``prefill_chunk="auto"`` expands to: three
+# compiled chunk shapes, picked per tick by batch composition (see
+# Scheduler._pick_chunk)
+AUTO_CHUNK_LADDER = (64, 128, 256)
 
 
 @dataclasses.dataclass
@@ -107,6 +127,9 @@ class Request:
     eos_id: int | None = None
     prefix_key: object = None  # hashable; same key ⇒ shared prompt prefix
     priority: int = 0  # higher = preempted later
+    # per-request sampling knobs (temperature/top-k/top-p/seed/stop set) —
+    # turned into per-slot device operands at admission
+    sampling: SamplingParams = SamplingParams(max_tokens=1)
     # resume state: tokens generated before a preemption — re-seeded into
     # the slot on re-admission, never re-sampled — and (swap resume) the
     # host snapshot of the request's written pages
@@ -116,6 +139,15 @@ class Request:
     # anti-thrash backoff: a preempted request is not re-admitted before
     # this tick while its preemptor still runs (see _admit_wave)
     cooldown_until: int = 0
+
+    def __post_init__(self):
+        # the stop set lives in sampling; fold a directly-passed eos_id in
+        # so a hand-built Request(…, eos_id=…) stops like a submitted one
+        if self.eos_id is not None \
+                and self.eos_id not in self.sampling.stop_set:
+            self.sampling = dataclasses.replace(
+                self.sampling, stop_token_ids=self.sampling.stop_token_ids
+                + (int(self.eos_id),))
 
     @property
     def prefill_tokens(self) -> np.ndarray:
@@ -155,8 +187,8 @@ class _SlotState:
     def done(self) -> bool:
         if len(self.generated) >= self.req.max_new_tokens:
             return True
-        return (self.req.eos_id is not None and self.generated
-                and self.generated[-1] == self.req.eos_id)
+        return bool(self.generated
+                    and self.generated[-1] in self.req.sampling.stop_set)
 
 
 @dataclasses.dataclass
@@ -168,6 +200,7 @@ class SchedulerStats:
     #                          single-chunk prompt counts 1)
     admitted: int = 0  # admissions incl. resumptions
     evicted: int = 0  # completed requests
+    aborted: int = 0  # abort() cancellations
     preemptions: int = 0  # evict-to-queue events (lazy mode)
     prefix_forks: int = 0  # admissions that attached to a shared prefix
     slot_ticks: int = 0  # Σ active slots over decode steps (mean concurrency
@@ -181,6 +214,8 @@ class SchedulerStats:
     #                           mode stays O(1); wave mode grows per bucket)
     # rid → ticks from submit to the first sampled token (TTFT in ticks)
     ttft_ticks: dict = dataclasses.field(default_factory=dict)
+    # chunk size → ticks it was picked (adaptive prefill_chunk="auto")
+    auto_chunks: dict = dataclasses.field(default_factory=dict)
 
 
 def _bucket(n: int) -> int:
@@ -201,25 +236,43 @@ class Scheduler:
     ``prefill_mode="chunked"`` (default) admits prompts in fixed
     ``prefill_chunk``-token pieces through one compiled step shape (see
     module doc); ``"wave"`` restores the per-bucket ragged wave prefill.
-    ``preempt_cooldown`` (ticks) is the anti-thrash backoff: a preempted
-    request is held in the queue that many extra ticks before re-admission
-    while other work runs, so an evict→re-admit→evict swap storm can't
-    oscillate tick over tick (0 restores the immediate re-admit)."""
+    ``prefill_chunk`` also takes ``"auto"`` (the ``AUTO_CHUNK_LADDER``
+    sizes) or an explicit tuple of sizes: the chunk is then picked PER
+    TICK from the ladder — small when decode slots dominate (a decoding
+    request pays the chunk's latency every tick, so tail latency wins) or
+    when any decoding request carries
+    ``SamplingParams(latency_hint="interactive")``, large when the batch
+    is prefill-heavy (throughput wins) — bounding the compile count by
+    the ladder length instead of 1 (``stats.auto_chunks`` records the
+    choices; ``benchmarks/chunked_prefill.py`` measures the tail-tick
+    effect). ``preempt_cooldown`` (ticks) is the anti-thrash backoff: a
+    preempted request is held in the queue that many extra ticks before
+    re-admission while other work runs, so an evict→re-admit→evict swap
+    storm can't oscillate tick over tick (0 restores the immediate
+    re-admit)."""
 
     def __init__(self, cfg: ArchConfig, params,
                  opts: RuntimeOpts = RuntimeOpts(),
                  *, num_pages: int = 128, page_size: int = DEFAULT_PAGE_SIZE,
                  max_slots: int = 4, max_seq_len: int | None = None,
                  lazy_growth: bool = False, resume: str = "swap",
-                 prefill_mode: str = "chunked", prefill_chunk: int = 256,
+                 prefill_mode: str = "chunked",
+                 prefill_chunk: int | str | tuple = 256,
                  preempt_cooldown: int = 1):
         if resume not in ("swap", "refill"):
             raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
         if prefill_mode not in ("chunked", "wave"):
             raise ValueError(
                 f"prefill_mode must be 'chunked' or 'wave', got {prefill_mode}")
-        if prefill_chunk < 1:
-            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if prefill_chunk == "auto":
+            ladder = AUTO_CHUNK_LADDER
+        elif isinstance(prefill_chunk, (tuple, list)):
+            ladder = tuple(sorted({int(c) for c in prefill_chunk}))
+        else:
+            ladder = (int(prefill_chunk),)
+        if not ladder or min(ladder) < 1:
+            raise ValueError(
+                f"prefill_chunk sizes must be >= 1, got {prefill_chunk!r}")
         self.cfg, self.params, self.opts = cfg, params, opts
         self.pool = PagedKVPool(cfg, num_pages=num_pages, page_size=page_size,
                                 max_requests=max_slots, max_seq_len=max_seq_len)
@@ -228,8 +281,9 @@ class Scheduler:
         self.resume = resume
         self.prefill_mode = prefill_mode
         # no prompt can exceed the block table's reach, so neither need a chunk
-        self.prefill_chunk = min(prefill_chunk,
-                                 self.pool.max_blocks * page_size)
+        reach = self.pool.max_blocks * page_size
+        self._chunk_ladder = tuple(sorted({min(c, reach) for c in ladder}))
+        self.prefill_chunk = self._chunk_ladder[-1]
         self.preempt_cooldown = preempt_cooldown
         self._tick = 0
         self._shapes: set = set()  # distinct jitted call shapes dispatched
@@ -237,26 +291,61 @@ class Scheduler:
         self.queue: deque = deque()
         self.slots: list = [None] * max_slots
         self.results: dict = {}
+        self.finish_reasons: dict = {}  # rid → "stop" | "length" | "abort"
         self.stats = SchedulerStats()
         self._prefixes: dict = {}
         self._next_rid = 0
         self._admit_seq = 0
+        # per-token streaming events (rid, token_index, token) in emission
+        # order, and rids finished since the last drain — both consumed by
+        # serving.api.LLMServer; a long-lived driver reads the finished
+        # QUEUE instead of rescanning the whole results dict per tick
+        self._events: list = []
+        self._finished: list = []
+        # per-slot sampling operands, updated at admit/evict so every tick
+        # ships the SAME (max_slots,)-shaped arrays — per-request sampling
+        # without per-request compiles. Freed rows reset to greedy.
+        self._op_keys = np.zeros((max_slots, 2), np.uint32)
+        self._op_temp = np.zeros((max_slots,), np.float32)
+        self._op_topk = np.zeros((max_slots,), np.int32)
+        self._op_topp = np.ones((max_slots,), np.float32)
+        # device-resident copy, rebuilt lazily after _set_ops/_reset_ops —
+        # the hot decode tick must not re-upload unchanged operands
+        self._dev_ops: tuple | None = None
         self._prefill = jax.jit(
             lambda params, tokens, caches, positions: paged_prefill(
                 params, cfg, tokens, caches, positions, opts))
         self._prefill_shared = jax.jit(
             lambda params, tokens, caches, positions: paged_prefill_shared(
                 params, cfg, tokens, caches, positions, opts))
-        self._decode = jax.jit(
-            lambda params, tokens, caches, pos: paged_decode_step(
-                params, cfg, tokens, caches, pos, opts))
+
+        def decode_sample(params, tokens, caches, pos, keys, t, temp, tk, tp):
+            # decode + sampling as ONE jitted function: logits never leave
+            # the device — only the sampled token ids cross to the host
+            logits, new_caches = paged_decode_step(params, cfg, tokens,
+                                                   caches, pos, opts)
+            return sample_tokens(logits, keys, t, temp, tk, tp), new_caches
+
+        self._decode = jax.jit(decode_sample)
+        self._sample = jax.jit(sample_tokens)
 
     # -------------------------------------------------------------- intake
 
-    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None,
+    def submit(self, prompt, max_new_tokens: int | None = None,
+               eos_id: int | None = None,
                *, prefix_key=None, prefix_len: int | None = None,
-               priority: int = 0) -> int:
+               priority: int | None = None,
+               sampling: SamplingParams | None = None) -> int:
         """Enqueue a request; returns its rid.
+
+        ``sampling`` carries every per-request knob of the serving API
+        (``core.sampling.SamplingParams``): max_tokens, temperature /
+        top-k / top-p / seed (the on-device per-slot sampler operands),
+        the stop-token set, priority, prefix declaration and latency
+        hint. When given, it is the single source of truth and the legacy
+        positional arguments must be omitted. The legacy form
+        ``submit(prompt, max_new_tokens, eos_id, prefix_key=, ...)``
+        keeps working — it builds greedy ``SamplingParams`` internally.
 
         ``prefix_key`` (any hashable) declares that this prompt's first
         ``prefix_len`` TOKENS are shared verbatim with every other request
@@ -270,11 +359,29 @@ class Scheduler:
         produce the request's first logits) and must match token-for-token
         across the key's requests. ``priority`` orders preemption victims
         in lazy mode (lower evicts first)."""
+        if sampling is None:
+            if max_new_tokens is None:
+                raise ValueError("submit needs max_new_tokens or sampling=")
+            sampling = SamplingParams(
+                max_tokens=int(max_new_tokens), eos_id=eos_id,
+                priority=priority or 0, prefix_key=prefix_key,
+                prefix_len=prefix_len)
+            priority = sampling.priority
+        elif any(a is not None for a in (max_new_tokens, eos_id, prefix_key,
+                                         prefix_len, priority)):
+            raise ValueError(
+                "pass either sampling= or the legacy arguments, not both — "
+                "sampling is the single source of truth when given")
+        else:
+            prefix_key = sampling.prefix_key
+            prefix_len = sampling.prefix_len
+            priority = sampling.priority
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        assert prompt.size >= 1 and max_new_tokens >= 1
+        assert prompt.size >= 1 and sampling.max_tokens >= 1
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, prompt, max_new_tokens, eos_id, priority=priority,
+        req = Request(rid, prompt, sampling.max_tokens, sampling.eos_id,
+                      priority=priority, sampling=sampling,
                       submit_tick=self._tick)
         if prefix_key is not None:
             entry = self._prefixes.get(prefix_key)
@@ -317,7 +424,89 @@ class Scheduler:
         self._prefixes = {k: e for k, e in self._prefixes.items()
                           if k in live}
 
+    def abort(self, rid: int) -> bool:
+        """Cancel a request wherever it currently is — queued (including
+        preempted-and-swapped), mid-prefill, or decoding. The partial
+        result (prompt + tokens emitted so far) is recorded with finish
+        reason ``"abort"``; a live slot's pages return to the pool this
+        call. Returns False when the rid is unknown or already finished
+        (finished results are never retracted)."""
+        for req in self.queue:
+            if req.rid != rid:
+                continue
+            if req.snapshot is not None:
+                self._swap_bytes -= sum(a.nbytes
+                                        for leaves in req.snapshot["data"]
+                                        for a in leaves)
+                req.snapshot = None
+            self.queue.remove(req)
+            self._finish_abort(req, req.generated)
+            return True
+        for i, st in enumerate(self.slots):
+            if st is None or st.req.rid != rid:
+                continue
+            self.pool.free(i)
+            self.slots[i] = None
+            self._reset_ops(i)
+            self._finish_abort(st.req, st.generated)
+            return True
+        return False
+
+    def _finish_abort(self, req: Request, generated: list) -> None:
+        # an aborted prefix CREATOR must not strand waiting forks: clear
+        # the claim so the next same-key admission materializes the prefix
+        entry = self._prefixes.get(req.prefix_key) \
+            if req.prefix_key is not None else None
+        if entry is not None and entry.creator_rid == req.rid:
+            entry.creator_rid = None
+        self.results[req.rid] = np.concatenate(
+            [req.prompt, np.asarray(generated, np.int32)])
+        self.finish_reasons[req.rid] = "abort"
+        self._finished.append(req.rid)
+        self.stats.aborted += 1
+
+    def drain_events(self) -> list:
+        """Return and clear the per-token events emitted since the last
+        call: ``(rid, token_index, token)`` tuples in emission order —
+        position order per request, interleaved across requests."""
+        ev, self._events = self._events, []
+        return ev
+
+    def drain_finished(self) -> list:
+        """Return and clear the rids that finished (evicted or aborted)
+        since the last call — O(newly finished), however many results a
+        long-running scheduler retains."""
+        f, self._finished = self._finished, []
+        return f
+
     # ------------------------------------------------------------ lifecycle
+
+    def _set_ops(self, slot: int, req: Request) -> None:
+        """Install the request's sampling operands in its slot row."""
+        sp = req.sampling
+        self._op_keys[slot] = np.asarray(jax.random.PRNGKey(sp.seed),
+                                         np.uint32)
+        self._op_temp[slot] = sp.temperature
+        self._op_topk[slot] = sp.top_k
+        self._op_topp[slot] = sp.top_p
+        self._dev_ops = None
+
+    def _reset_ops(self, slot: int) -> None:
+        self._op_keys[slot] = 0
+        self._op_temp[slot] = 0.0
+        self._op_topk[slot] = 0
+        self._op_topp[slot] = 1.0
+        self._dev_ops = None
+
+    def _device_ops(self) -> tuple:
+        """(keys, temperature, top_k, top_p) for ALL slot rows, uploaded
+        once per operand change rather than once per tick."""
+        if self._dev_ops is None:
+            self._dev_ops = (jnp.asarray(self._op_keys),
+                             jnp.asarray(self._op_temp),
+                             jnp.asarray(self._op_topk),
+                             jnp.asarray(self._op_topp))
+        return self._dev_ops
 
     def _register_shape(self, *shape) -> None:
         """Track every distinct jitted call shape the scheduler dispatches —
@@ -395,6 +584,7 @@ class Scheduler:
             self.slots[slot] = _SlotState(req, list(req.generated),
                                           self._admit_seq,
                                           prefilled=int(self.pool.lengths[slot]))
+            self._set_ops(slot, req)
             self._admit_seq += 1
         return admitted, restored
 
@@ -404,6 +594,7 @@ class Scheduler:
         a fresh sample) and record its TTFT."""
         if not st.generated:
             st.generated.append(token)
+            self._events.append((st.req.rid, 0, token))
             self.stats.ttft_ticks.setdefault(
                 st.req.rid, self._tick - st.req.submit_tick)
 
@@ -445,7 +636,7 @@ class Scheduler:
             caches=self.pool.device_caches(rows=admitted),
             positions=jnp.asarray(posn))
         self.pool.update_from(new_caches)
-        first = np.asarray(jnp.argmax(logits, axis=-1))
+        first = self._sample_first(logits, admitted)
         for i, slot in enumerate(admitted):
             st = self.slots[slot]
             self.pool.commit_prefill(slot, int(toks[i].size))
@@ -454,6 +645,56 @@ class Scheduler:
             self._maybe_pin_prefix(st, slot)
         self.stats.prefills += 1
         self.stats.admitted += r
+
+    def _sample_first(self, logits, rows: list | None) -> np.ndarray:
+        """Sample each row's FIRST token (generation index 0) from prefill
+        logits with its own sampling operands — same device sampler, same
+        per-request PRNG lane as the decode tick, so a request's stream is
+        seamless across the prefill→decode boundary. ``rows`` are the slot
+        indices matching ``logits``'s rows (``None`` = all slots, served
+        from the cached device operands); rows that didn't finish their
+        prompt this call simply discard the sample."""
+        if rows is None:
+            keys, temp, tk, tp = self._device_ops()
+            n = self.max_slots
+        else:
+            idx = np.asarray(rows, np.intp)
+            keys, temp, tk, tp = (jnp.asarray(self._op_keys[idx]),
+                                  jnp.asarray(self._op_temp[idx]),
+                                  jnp.asarray(self._op_topk[idx]),
+                                  jnp.asarray(self._op_topp[idx]))
+            n = len(rows)
+        return np.asarray(self._sample(logits, keys,
+                                       jnp.zeros((n,), jnp.int32),
+                                       temp, tk, tp))
+
+    def _pick_chunk(self) -> int:
+        """The tick's prefill chunk size. Fixed ladder of one → that size.
+        Adaptive (``prefill_chunk="auto"`` or an explicit ladder): shrink
+        when decode slots dominate the batch — every decoding request pays
+        the chunk call's latency this tick — or when any decoding request
+        hints ``latency_hint="interactive"``; grow when the batch is
+        prefill-heavy and nobody decoding objects (throughput); middle
+        rung when balanced. Each rung is one compiled shape, so the
+        compile count stays bounded by the ladder length."""
+        ladder = self._chunk_ladder
+        if len(ladder) == 1:
+            return ladder[0]
+        decoding = [st for st in self.slots
+                    if st is not None and not st.prefilling and not st.done]
+        n_pre = sum(1 for st in self.slots
+                    if st is not None and st.prefilling)
+        if decoding and any(st.req.sampling.latency_hint == "interactive"
+                            for st in decoding):
+            c = ladder[0]
+        elif len(decoding) > n_pre:
+            c = ladder[0]
+        elif n_pre > len(decoding):
+            c = ladder[-1]
+        else:
+            c = ladder[len(ladder) // 2]
+        self.stats.auto_chunks[c] = self.stats.auto_chunks.get(c, 0) + 1
+        return c
 
     def _prefill_chunk_tick(self) -> bool:
         """Advance every mid-prefill slot by ONE ``prefill_chunk``-token
@@ -474,7 +715,7 @@ class Scheduler:
                 if st is not None and st.prefilling]
         if not rows:
             return False
-        c = self.prefill_chunk
+        c = self._pick_chunk()
         fresh = [i for i in rows if int(self.pool.lengths[i]) == 0]
         cont = [i for i in rows if int(self.pool.lengths[i]) > 0]
         for group, fn, kind in ((fresh, self._prefill, "chunk"),
@@ -499,7 +740,10 @@ class Scheduler:
                 caches=self.pool.device_caches(),
                 positions=jnp.asarray(posn))
             self.pool.update_from(new_caches)
-            first = np.asarray(jnp.argmax(logits, axis=-1))
+            # only dispatch the sampler on ticks where some row actually
+            # completes its prompt — mid-prompt chunks discard the sample
+            first = self._sample_first(logits, None) \
+                if any(hi == total for hi, total in ends.values()) else None
             for i in group:
                 st = self.slots[i]
                 hi, total = ends[i]
@@ -569,6 +813,7 @@ class Scheduler:
                                              self._swap_bytes)
         self.pool.free(victim)
         self.slots[victim] = None
+        self._reset_ops(victim)
         self.queue.appendleft(st.req)
         self.stats.preemptions += 1
         return True
@@ -603,16 +848,26 @@ class Scheduler:
         self._register_shape("decode", self.max_slots, 1)
         tokens = np.zeros((self.max_slots, 1), np.int32)
         pos = np.full((self.max_slots,), -1, np.int32)
+        # each row samples at its OWN generation index (folded into its
+        # PRNG lane) — the stream a request draws is independent of which
+        # slot it sits in and who else shares the batch
+        t = np.zeros((self.max_slots,), np.int32)
         for i in active:
             tokens[i, 0] = self.slots[i].generated[-1]
             pos[i] = int(self.pool.lengths[i]) - 1  # position being written
-        logits, new_caches = self._decode(
+            t[i] = len(self.slots[i].generated)
+        keys, temp, tk, tp = self._device_ops()
+        nxt, new_caches = self._decode(
             self.params, jnp.asarray(tokens),
-            caches=self.pool.device_caches(), pos=jnp.asarray(pos))
+            caches=self.pool.device_caches(), pos=jnp.asarray(pos),
+            keys=keys, t=jnp.asarray(t), temp=temp, tk=tk, tp=tp)
         self.pool.update_from(new_caches)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(nxt)
         for i in active:
-            self.slots[i].generated.append(int(nxt[i]))
+            st = self.slots[i]
+            st.generated.append(int(nxt[i]))
+            self._events.append((st.req.rid, len(st.generated) - 1,
+                                 int(nxt[i])))
         self.stats.steps += 1
         self.stats.slot_ticks += len(active)
 
@@ -620,13 +875,15 @@ class Scheduler:
         for i, st in enumerate(self.slots):
             if st is None or not st.done:
                 continue
-            toks = st.generated[: st.req.max_new_tokens]
-            if st.req.eos_id is not None and st.req.eos_id in toks:
-                toks = toks[: toks.index(st.req.eos_id) + 1]
+            toks, reason = truncate_at_stop(
+                st.generated[: st.req.max_new_tokens], st.req.sampling)
             self.results[st.req.rid] = np.concatenate(
                 [st.req.prompt, np.asarray(toks, np.int32)])
+            self.finish_reasons[st.req.rid] = reason
+            self._finished.append(st.req.rid)
             self.pool.free(i)
             self.slots[i] = None
+            self._reset_ops(i)
             self.stats.evicted += 1
 
     def _track_occupancy(self) -> None:

@@ -27,6 +27,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.channel import ChannelConfig, LatencyModel, optimal_rate
 from repro.core.opsc import OPSCConfig, kv_cache_bytes
+from repro.core.sampling import (broadcast_params, device_operands,
+                                 sample_tokens)
 from repro.core.payload import decode as payload_decode
 from repro.core.payload import encode as payload_encode
 from repro.models import layers as L
@@ -134,9 +136,14 @@ class SplitEngine:
         self._edge_front = jax.jit(self._edge_front_fn, static_argnames=("decode",))
         self._cloud_back = jax.jit(self._cloud_back_fn, static_argnames=("decode",))
         self._cloud_back_shared = jax.jit(self._cloud_back_shared_fn)
-        # device-side helpers for the generation loop: greedy head and
-        # sequence-buffer writes (index is a traced operand — one trace total)
+        # device-side helpers for the generation loop: greedy head, the
+        # per-request sampler (serving-API path; step index and every knob
+        # traced — one trace total), and sequence-buffer writes
         self._next_token = jax.jit(lambda lg: jnp.argmax(lg, axis=-1)[:, None])
+        self._sample_next = jax.jit(
+            lambda lg, keys, t, temp, tk, tp: sample_tokens(
+                lg, keys, jnp.full((lg.shape[0],), t, jnp.int32),
+                temp, tk, tp)[:, None])
         self._seq_write = jax.jit(
             lambda buf, val, i: jax.lax.dynamic_update_slice(
                 buf, val.astype(buf.dtype), (0, i) + (0,) * (buf.ndim - 2)))
@@ -212,8 +219,17 @@ class SplitEngine:
     # ----------------------------------------------------------- generate
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 compress: bool = True, shared_prefix_len: int = 0) -> tuple:
-        """Greedy split-computing generation. Returns (tokens, SplitStats).
+                 compress: bool = True, shared_prefix_len: int = 0,
+                 sampling=None) -> tuple:
+        """Split-computing generation. Returns (tokens, SplitStats).
+
+        ``sampling`` — one ``core.sampling.SamplingParams`` (applied to
+        every row) or a list of ``len(prompts)`` — threads the serving
+        API's per-request temperature / top-k / top-p / seed through the
+        cloud-side token head via the shared ``sample_tokens`` sampler
+        (per-row PRNG lanes folded per step — the same stream the fused
+        and paged backends draw). ``None`` or all-greedy params take the
+        exact argmax path, bit-identical to the pre-API engine.
 
         The loop is host-orchestrated only where Algorithm 2 demands it (the
         measured payload bits feed the deadline ladder); tokens and the
@@ -238,6 +254,14 @@ class SplitEngine:
         # dynamic_update_slice would clamp and silently corrupt the history
         assert s + max_new_tokens <= self.cache_len, "cache_len too small"
         stats = SplitStats()
+        samp_ops = None  # None → the exact greedy argmax path
+        if sampling is not None:
+            splist = broadcast_params(sampling, b)
+            if not all(p.greedy for p in splist):
+                if tokens.ndim != 2:
+                    raise NotImplementedError(
+                        "non-greedy sampling needs (B, S) token prompts")
+                samp_ops = device_operands(splist)
 
         nfront, nback = self.split_block, cfg.num_blocks - self.split_block
         edge_caches = jax.tree_util.tree_map(
@@ -352,7 +376,12 @@ class SplitEngine:
         i_kv = self.opsc.i_kv
         pos = s
         for step in range(max_new_tokens):
-            nxt = self._next_token(logits).astype(tokens.dtype)
+            if samp_ops is None:
+                nxt = self._next_token(logits).astype(tokens.dtype)
+            else:
+                keys, temp, tk, tp = samp_ops
+                nxt = self._sample_next(logits, keys, jnp.int32(step), temp,
+                                        tk, tp).astype(tokens.dtype)
             tok_buf = self._seq_write(tok_buf, nxt, jnp.int32(step))
             n_out = step + 1
             if step + 1 == max_new_tokens:

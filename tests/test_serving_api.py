@@ -1,0 +1,356 @@
+"""The request-level serving API (``serving.api``): greedy-equivalence
+regression across all three backends, seeded fused/paged sampling parity,
+stop-token and abort() mid-stream behavior, the streaming-order
+invariant, one-compiled-shape sampling on the paged backend, and the
+adaptive prefill chunk ladder."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.opsc import OPSCConfig
+from repro.core.sampling import SamplingParams
+from repro.models.transformer import RuntimeOpts, init_params
+from repro.serving import Engine, LLMServer, Scheduler, SplitEngine
+
+OPTS_Q = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False, quantized_kv=True,
+                     moe_capacity_factor=0.0)
+OPTS = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False,
+                   moe_capacity_factor=0.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    kw.setdefault("num_pages", 24)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_slots", 3)
+    return LLMServer(cfg, params, OPTS_Q, backend="paged", **kw)
+
+
+# --------------------------------------------------- greedy equivalence
+
+
+def test_default_params_reproduce_greedy_on_all_backends(tiny_model):
+    """Satellite regression: ``SamplingParams()`` defaults must reproduce
+    the pre-API greedy outputs BIT FOR BIT on fused, paged and split."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(0)
+    p = rng.integers(0, cfg.vocab_size, (6,))
+    want_q = Engine(cfg, params, OPTS_Q, cache_len=32).generate(
+        p[None], 5).tokens[0]
+    sp = SamplingParams(max_tokens=5)
+
+    rid = (srv := _paged(cfg, params)).submit(p, sp)
+    np.testing.assert_array_equal(srv.run()[rid].full_tokens, want_q)
+
+    srv = LLMServer(cfg, params, OPTS_Q, backend="fused", cache_len=32)
+    rid = srv.submit(p, sp)
+    np.testing.assert_array_equal(srv.run()[rid].full_tokens, want_q)
+
+    # split: reference is the legacy SplitEngine greedy run itself
+    opsc = OPSCConfig(split_layer=1, qw_front=16, i_kv=1)
+    want_split, _ = SplitEngine(cfg, params, opsc, opts=OPTS,
+                                cache_len=32).generate(p[None], 5,
+                                                       compress=False)
+    srv = LLMServer(cfg, params, OPTS, backend="split", opsc=opsc,
+                    compress=False, cache_len=32)
+    rid = srv.submit(p, sp)
+    out = srv.run()[rid]
+    np.testing.assert_array_equal(out.full_tokens, want_split[0])
+    assert out.split_stats is not None
+    assert out.split_stats.uplink_bits_eq3 > 0
+    # and the unchanged legacy surfaces still agree with themselves
+    np.testing.assert_array_equal(
+        Engine(cfg, params, OPTS_Q, cache_len=32).generate(p[None], 5).tokens[0],
+        want_q)
+
+
+# ----------------------------------------------------- sampling parity
+
+
+def test_seeded_sampling_parity_paged_vs_fused(tiny_model):
+    """Same per-request seeds ⇒ same tokens: a ragged non-greedy batch
+    through the paged scheduler equals per-request fused generation."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n in (5, 8, 3)]
+    sps = [SamplingParams(max_tokens=6, temperature=0.9, seed=7),
+           SamplingParams(max_tokens=5, temperature=1.2, top_k=4, seed=11),
+           SamplingParams(max_tokens=7, temperature=0.8, top_p=0.85, seed=13)]
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    want = [eng.generate_requests(p[None], sp).tokens[0]
+            for p, sp in zip(prompts, sps)]
+
+    srv = _paged(cfg, params)
+    rids = [srv.submit(p, sp) for p, sp in zip(prompts, sps)]
+    outs = srv.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(outs[rid].full_tokens, w)
+
+
+def test_paged_sampling_is_one_compiled_shape(tiny_model):
+    """Acceptance: the paged backend serves any mix of SamplingParams
+    through the SAME compiled shapes as an all-greedy run — the knobs are
+    traced operands, never compile keys."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n in (5, 7)]
+
+    def serve(sps):
+        srv = _paged(cfg, params, max_slots=2)
+        for p, sp in zip(prompts, sps):
+            srv.submit(p, sp)
+        srv.run()
+        return srv.backend.scheduler.stats.compiled_shapes
+
+    greedy = serve([SamplingParams(max_tokens=4)] * 2)
+    mixed = serve([SamplingParams(max_tokens=4, temperature=1.0, seed=3),
+                   SamplingParams(max_tokens=4, top_k=5, temperature=0.7,
+                                  top_p=0.9, seed=4)])
+    assert mixed == greedy
+
+
+# ------------------------------------------------- stop tokens & abort
+
+
+def test_stop_token_finishes_midstream_paged(tiny_model):
+    """A stop-set token ends the request the tick it is sampled: truncated
+    output, reason "stop", fewer decode events than max_tokens."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, cfg.vocab_size, (5,))
+    free = Engine(cfg, params, OPTS_Q, cache_len=32).generate(
+        p[None], 8).tokens[0]
+    stop = int(free[5 + 3])  # the 4th generated token
+
+    srv = _paged(cfg, params)
+    rid = srv.submit(p, SamplingParams(max_tokens=8, stop_token_ids=(stop,)))
+    events = list(srv.stream())
+    out = srv.outputs()[rid]
+    assert out.finish_reason == "stop"
+    assert out.tokens[-1] == stop and out.tokens.shape[0] == 4
+    np.testing.assert_array_equal(out.full_tokens, free[: 5 + 4])
+    token_events = [e for e in events if not e.finished]
+    assert len(token_events) == 4  # nothing streamed past the stop
+
+
+def test_abort_midstream_paged(tiny_model):
+    """abort() mid-stream cancels one request in place: its partial output
+    carries reason "abort", its co-tenant finishes and still matches the
+    per-request engine bit-for-bit, and the pool fully reclaims."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(4)
+    a = rng.integers(0, cfg.vocab_size, (5,))
+    b = rng.integers(0, cfg.vocab_size, (5,))
+    srv = _paged(cfg, params, max_slots=2)
+    ra = srv.submit(a, SamplingParams(max_tokens=10))
+    rb = srv.submit(b, SamplingParams(max_tokens=6))
+    aborted = False
+    for ev in srv.stream():
+        if not aborted and ev.rid == ra and not ev.finished and ev.index >= 1:
+            assert srv.abort(ra)
+            aborted = True
+    outs = srv.outputs()
+    assert outs[ra].finish_reason == "abort"
+    assert 1 <= outs[ra].tokens.shape[0] < 10  # cut mid-generation
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    np.testing.assert_array_equal(outs[rb].full_tokens,
+                                  eng.generate(b[None], 6).tokens[0])
+    sched = srv.backend.scheduler
+    assert sched.stats.aborted == 1
+    assert sched.pool.pages_in_use == 0
+    assert not srv.abort(ra)  # already finished — not retractable
+
+
+def test_abort_on_fused_backend_cuts_stream(tiny_model):
+    """Replay backends too: abort mid-replay keeps the streamed prefix and
+    emits a finish marker with reason "abort"."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(10)
+    p = rng.integers(0, cfg.vocab_size, (4,))
+    srv = LLMServer(cfg, params, OPTS_Q, backend="fused", cache_len=32)
+    rid = srv.submit(p, SamplingParams(max_tokens=6))
+    events = list(srv.backend.step())  # computes + streams token 0
+    assert [e.index for e in events if e.rid == rid] == [0]
+    assert srv.abort(rid)
+    tail = list(srv.stream())
+    assert [(e.finished, e.finish_reason) for e in tail if e.rid == rid] \
+        == [(True, "abort")]
+    out = srv.outputs()[rid]
+    assert out.finish_reason == "abort" and out.tokens.shape[0] == 1
+    assert not srv.pending
+
+
+def test_abort_queued_request_never_runs(tiny_model):
+    cfg, params = tiny_model
+    rng = np.random.default_rng(5)
+    srv = _paged(cfg, params, max_slots=1, num_pages=8)
+    ra = srv.submit(rng.integers(0, cfg.vocab_size, (4,)),
+                    SamplingParams(max_tokens=3))
+    rb = srv.submit(rng.integers(0, cfg.vocab_size, (4,)),
+                    SamplingParams(max_tokens=3))
+    assert srv.abort(rb)  # still queued behind ra
+    outs = srv.run()
+    assert outs[rb].finish_reason == "abort"
+    assert outs[rb].tokens.shape[0] == 0
+    assert outs[ra].finish_reason == "length"
+
+
+# --------------------------------------------------- streaming invariant
+
+
+@pytest.mark.parametrize("backend", ["paged", "fused"])
+def test_streaming_order_invariant(tiny_model, backend):
+    """Per request, token events arrive in strict position order 0,1,2,…;
+    concurrent requests interleave (both backends run them together)."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, (4,)) for _ in range(3)]
+    if backend == "paged":
+        srv = _paged(cfg, params)
+    else:
+        srv = LLMServer(cfg, params, OPTS_Q, backend="fused", cache_len=32)
+    rids = [srv.submit(p, SamplingParams(max_tokens=5, seed=i))
+            for i, p in enumerate(prompts)]
+    events = list(srv.stream())
+    seen = {r: [] for r in rids}
+    for ev in events:
+        if not ev.finished:
+            seen[ev.rid].append(ev.index)
+    for r in rids:
+        assert seen[r] == list(range(5))  # strict position order
+    # interleaving: some other request's token lands between one request's
+    # consecutive tokens
+    order = [ev.rid for ev in events if not ev.finished]
+    assert any(order[i] != order[i + 1] for i in range(len(order) - 1))
+    # every request ends with exactly one finish marker
+    fins = [ev for ev in events if ev.finished]
+    assert sorted(ev.rid for ev in fins) == sorted(rids)
+    assert all(ev.token == -1 and ev.finish_reason == "length"
+               for ev in fins)
+
+
+# ------------------------------------------------- adaptive chunk ladder
+
+
+def test_adaptive_chunk_matches_engine_and_adapts(tiny_model):
+    """``prefill_chunk`` ladder: outputs stay bit-identical to the engine
+    while the per-tick chunk genuinely moves — large while the batch is
+    prefill-heavy, small once decode slots dominate."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(7)
+    long_p = rng.integers(0, cfg.vocab_size, (24,))
+    shorts = [rng.integers(0, cfg.vocab_size, (4,)) for _ in range(2)]
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=24, page_size=4,
+                      max_slots=3, prefill_chunk=(2, 4, 8))
+    rids = [sched.submit(long_p, 4)] + [sched.submit(p, 8) for p in shorts]
+    results = sched.run()
+    eng = Engine(cfg, params, OPTS_Q, cache_len=64)
+    for rid, (p, mn) in zip(rids, [(long_p, 4)] + [(p, 8) for p in shorts]):
+        np.testing.assert_array_equal(results[rid],
+                                      eng.generate(p[None], mn).tokens[0])
+    picks = sched.stats.auto_chunks
+    assert len(picks) >= 2, picks  # the ladder was actually walked
+    assert 8 in picks  # prefill-heavy start took the big rung
+    assert 2 in picks  # decode-dominated tail shrank the chunk
+    # compile count stays bounded by the ladder, not the prompt mix
+    assert sched.stats.compiled_shapes <= 2 + 2 * 3  # decode+prefill rungs
+
+
+def test_latency_hint_interactive_forces_smallest_chunk(tiny_model):
+    """A decoding request with latency_hint="interactive" pins the chunk
+    to the smallest rung even when the batch is otherwise balanced."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(8)
+    short = rng.integers(0, cfg.vocab_size, (3,))
+    long_p = rng.integers(0, cfg.vocab_size, (16,))
+
+    def serve(hint):
+        sched = Scheduler(cfg, params, OPTS_Q, num_pages=24, page_size=4,
+                          max_slots=2, prefill_chunk=(2, 4, 8))
+        sched.submit(short, sampling=SamplingParams(
+            max_tokens=10, latency_hint=hint))
+        sched.submit(long_p, 3)
+        sched.run()
+        return sched.stats.auto_chunks
+
+    with_hint = serve("interactive")
+    without = serve("balanced")
+    assert 2 in with_hint  # interactive decode pulled the smallest rung
+    assert 2 not in without  # balanced mix never needed it
+
+
+# ----------------------------------------------------------- facade misc
+
+
+def test_llm_server_rejects_unknown_backend(tiny_model):
+    cfg, params = tiny_model
+    with pytest.raises(ValueError, match="backend"):
+        LLMServer(cfg, params, OPTS_Q, backend="warp")
+    with pytest.raises(ValueError, match="opsc"):
+        LLMServer(cfg, params, OPTS_Q, backend="split")
+
+
+def test_llm_server_rejects_batched_prompt(tiny_model):
+    """A (B, S) matrix must NOT silently flatten into one long prompt —
+    the Engine.generate migration accident."""
+    cfg, params = tiny_model
+    srv = _paged(cfg, params)
+    with pytest.raises(ValueError, match="one request per row"):
+        srv.submit(np.ones((4, 16), np.int32))
+
+
+def test_scheduler_submit_rejects_mixed_forms(tiny_model):
+    cfg, params = tiny_model
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=8, page_size=4,
+                      max_slots=1)
+    with pytest.raises(ValueError, match="not both"):
+        sched.submit(np.ones(3, np.int32), 4,
+                     sampling=SamplingParams(max_tokens=4))
+    with pytest.raises(ValueError, match="max_new_tokens or sampling"):
+        sched.submit(np.ones(3, np.int32))
+
+
+@pytest.mark.parametrize("backend", ["paged", "fused"])
+def test_release_drops_finished_outputs(tiny_model, backend):
+    """release(rid) frees a consumed result (long-lived-server memory
+    valve); unknown or live rids are refused."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, cfg.vocab_size, (4,))
+    srv = _paged(cfg, params) if backend == "paged" else \
+        LLMServer(cfg, params, OPTS_Q, backend="fused", cache_len=32)
+    rid = srv.submit(p, SamplingParams(max_tokens=3))
+    assert not srv.release(rid)  # not finished yet
+    srv.run()
+    assert rid in srv.outputs()
+    assert srv.release(rid)
+    assert rid not in srv.outputs()
+    assert not srv.release(rid)  # already gone
+
+
+def test_fused_backend_mixed_lengths_and_stop(tiny_model):
+    """The fused backend groups ragged prompts by length, honors per-row
+    max_tokens, and truncates at per-request stop tokens."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(9)
+    p1 = rng.integers(0, cfg.vocab_size, (5,))
+    p2 = rng.integers(0, cfg.vocab_size, (8,))
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    free1 = eng.generate(p1[None], 6).tokens[0]
+    stop = int(free1[5 + 1])  # second generated token
+    srv = LLMServer(cfg, params, OPTS_Q, backend="fused", cache_len=32)
+    r1 = srv.submit(p1, SamplingParams(max_tokens=6, stop_token_ids=(stop,)))
+    r2 = srv.submit(p2, SamplingParams(max_tokens=3))
+    outs = srv.run()
+    assert outs[r1].finish_reason == "stop"
+    np.testing.assert_array_equal(outs[r1].full_tokens, free1[: 5 + 2])
+    np.testing.assert_array_equal(outs[r2].full_tokens,
+                                  eng.generate(p2[None], 3).tokens[0])

@@ -17,7 +17,7 @@ import re
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_DOCS = ["README.md", "src/repro/serving/README.md"]
+DEFAULT_DOCS = ["README.md", "src/repro/serving/README.md", "MIGRATION.md"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # back-ticked tokens that look like repo paths: `src/...`, `tests/...`, etc.
