@@ -1,0 +1,196 @@
+"""packed_tick benchmark: the token-packed varlen tick vs the two-phase
+chunked tick and the wave tick it subsumes.
+
+The same three prompt mixes as ``benchmarks.chunked_prefill`` are served
+through the SAME scheduler and pool (worst-case admission, kernels in
+interpret mode off-TPU):
+
+  * packed  — ``tick_mode="packed"``: each tick gathers every decoding
+    slot's token PLUS up-to-budget prefill-chunk tokens into one flat
+    ``(1, token_budget)`` buffer and dispatches ONE jitted ``packed_step``
+    through the ``kernels.varlen_attention`` flat-batch page walk — one
+    compiled shape for the whole run, pad only in the buffer's tail;
+  * chunked — the default two-phase tick: one ``(1, chunk)`` prefill call
+    per admitting slot, then one ``(max_slots, 1)`` decode call — every
+    co-resident decode pays two dispatches per tick and both rectangles
+    carry their own padding;
+  * wave    — whole-prompt ragged wave prefill (one compile per
+    (R_adm, S_pad) bucket), the pre-chunking baseline.
+
+Reported per mix/variant: tokens/s, the TAIL tick latency (the longest
+single tick — what a co-resident decode request experiences while a
+prompt admits), the distinct-jit-shape count, the PAD FRACTION of all
+dispatched token rows (packed: ``stats.packed_pad_tokens`` over the
+buffer rows; chunked: the prefill rectangles' trailing pad plus the
+decode call's empty slot rows — both exact from scheduler stats; wave
+prefill padding is bucket-dependent and reported as null), and greedy
+parity vs per-request ``Engine.generate``. CPU wall numbers are
+call-path + dispatch-count comparisons, not TPU performance; the
+tick/shape/pad columns are exact on any backend. JSON artifact under
+experiments/packed_tick/.
+
+  PYTHONPATH=src python -m benchmarks.packed_tick [--smoke]
+
+``--smoke`` runs one shrunken mix — the CI packed-tick smoke step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "packed_tick")
+
+# (prompt_len, max_new_tokens) per request; pool pages per mix — the same
+# workloads the chunked-prefill benchmark serves, so the two artifacts
+# compose into one story
+MIXES = {
+    # the headline case: one long prompt admitted while short ones decode
+    "one_long": {"jobs": [(48, 4), (4, 10), (6, 10), (5, 10)], "pages": 28},
+    "bimodal": {"jobs": [(24, 4), (6, 8), (24, 4), (6, 8)], "pages": 28},
+    # high decode occupancy: every slot decodes almost the whole run —
+    # the mix where the per-tick dispatch count dominates
+    "short": {"jobs": [(6, 6)] * 4, "pages": 20},
+}
+SMOKE_MIXES = {"one_long": {"jobs": [(16, 3), (4, 6)], "pages": 16}}
+
+PAGE_SIZE = 4
+CHUNK = 8
+MAX_SLOTS = 3  # fewer slots than requests → mid-stream admission exercised
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import RuntimeOpts, init_params
+
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opts = RuntimeOpts(q_chunk=16, kv_chunk=32, remat=False,
+                       quantized_kv=True, moe_capacity_factor=0.0)
+    return cfg, params, opts
+
+
+def _pad_fraction(sched, variant, prompt_tokens):
+    """Exact pad share of all dispatched token rows, from scheduler stats.
+
+    packed: the flat buffer's tail rows. chunked: each prefill call is a
+    fixed ``(max_slots, chunk)`` rectangle (``stats.prefills`` counts the
+    calls; only the admitting rows' chunk tokens are useful) and each
+    decode call a ``(max_slots, 1)`` column (``steps * max_slots`` rows,
+    ``slot_ticks`` useful). wave: prefill rows depend on the
+    (R_adm, S_pad) buckets, which the stats don't record — None."""
+    s = sched.stats
+    if variant == "packed":
+        total = s.packed_tokens + s.packed_pad_tokens
+        return round(s.packed_pad_tokens / max(total, 1), 3)
+    if variant == "chunked":
+        rows = s.prefills * MAX_SLOTS * CHUNK + s.steps * MAX_SLOTS
+        useful = prompt_tokens + s.slot_ticks
+        return round((rows - useful) / max(rows, 1), 3)
+    return None
+
+
+def _serve(cfg, params, opts, jobs, prompts, variant, pages):
+    import numpy as np
+
+    from repro.serving.scheduler import Scheduler
+
+    max_seq = max(n + mn for n, mn in jobs)
+    sched = Scheduler(cfg, params, opts, num_pages=pages,
+                      page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+                      max_seq_len=max_seq, tick_mode=variant,
+                      prefill_chunk=CHUNK)
+    rids = [sched.submit(p, mn) for p, (_, mn) in zip(prompts, jobs)]
+    tick_walls = []
+    t0 = time.time()
+    while True:
+        t_tick = time.time()
+        more = sched.step()
+        tick_walls.append(time.time() - t_tick)
+        if not more:
+            break
+    wall = time.time() - t0
+    total_tokens = sum(mn for _, mn in jobs)
+    prompt_tokens = sum(n for n, _ in jobs)
+    return sched.results, rids, {
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(total_tokens / wall, 2),
+        "tail_tick_s": round(float(np.max(tick_walls)), 3),
+        "median_tick_s": round(float(np.median(tick_walls)), 4),
+        "ticks": len(tick_walls),
+        "compiled_shapes": sched.stats.compiled_shapes,
+        "pad_fraction": _pad_fraction(sched, variant, prompt_tokens),
+        "packed_ticks": sched.stats.packed_ticks,
+        "mean_ttft_ticks": round(float(np.mean(
+            [sched.stats.ttft_ticks[r] for r in rids])), 2),
+    }
+
+
+def bench_packed_tick(smoke: bool = False):
+    import numpy as np
+
+    from repro.serving.engine import Engine
+
+    cfg, params, opts = _build()
+    mixes = SMOKE_MIXES if smoke else MIXES
+    rng = np.random.default_rng(0)
+    rows, rec = [], {"config": {"arch": cfg.name, "page_size": PAGE_SIZE,
+                                "chunk": CHUNK, "max_slots": MAX_SLOTS,
+                                "token_budget": CHUNK + MAX_SLOTS,
+                                "smoke": smoke}}
+    eng = Engine(cfg, params, opts, cache_len=64)
+    for name, mix in mixes.items():
+        jobs = mix["jobs"]
+        prompts = [rng.integers(0, cfg.vocab_size, (n,)) for n, _ in jobs]
+        want = [eng.generate(p[None], mn).tokens[0]
+                for p, (_, mn) in zip(prompts, jobs)]
+        entry = {"requests": len(jobs)}
+        for variant in ("packed", "chunked", "wave"):
+            results, rids, m = _serve(cfg, params, opts, jobs, prompts,
+                                      variant, mix["pages"])
+            m["outputs_match_baseline"] = all(
+                np.array_equal(results[r], w) for r, w in zip(rids, want))
+            entry[variant] = m
+            rows.append((f"packed_tick/{name}_{variant}",
+                         m["wall_s"] * 1e6,
+                         f"tok/s={m['tokens_per_s']} "
+                         f"tail_tick={m['tail_tick_s']}s "
+                         f"pad={m['pad_fraction']} "
+                         f"shapes={m['compiled_shapes']}"))
+        entry["tail_tick_reduction_vs_chunked"] = round(
+            entry["chunked"]["tail_tick_s"]
+            / max(entry["packed"]["tail_tick_s"], 1e-9), 2)
+        entry["throughput_gain_vs_chunked"] = round(
+            entry["packed"]["tokens_per_s"]
+            / max(entry["chunked"]["tokens_per_s"], 1e-9), 2)
+        entry["pad_fraction_reduction_vs_chunked"] = round(
+            entry["chunked"]["pad_fraction"]
+            - entry["packed"]["pad_fraction"], 3)
+        rec[name] = entry
+        rows.append((f"packed_tick/{name}_gain", 0.0,
+                     f"tput_x{entry['throughput_gain_vs_chunked']} "
+                     f"tail_x{entry['tail_tick_reduction_vs_chunked']}"))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "packed_tick_smoke.json" if smoke
+                       else "packed_tick.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one shrunken mix (CI packed-tick smoke step)")
+    args = ap.parse_args()
+    for name, us, derived in bench_packed_tick(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -205,3 +205,24 @@ def sample_tokens(logits, keys, t, temperature, top_k, top_p):
     sampled = jax.lax.cond(jnp.all(use_greedy),
                            lambda _: greedy_tok, non_greedy, None)
     return jnp.where(use_greedy, greedy_tok, sampled).astype(jnp.int32)
+
+
+def token_logprobs(logits, tokens):
+    """Log-probability of each row's chosen token under the row's RAW
+    softmax distribution — untempered and unfiltered, so the value means
+    the same thing for greedy and sampled rows and across backends (it is
+    the model's confidence in the emitted token, not the probability it
+    was drawn with after temperature/top-k/top-p reshaping). ``logits``
+    (..., V) any float dtype, ``tokens`` (...) int → (...) f32."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(lp, tokens[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+
+
+def sample_tokens_with_logprobs(logits, keys, t, temperature, top_k, top_p):
+    """:func:`sample_tokens` plus each drawn token's :func:`token_logprobs`
+    value, in one jittable call — the serving backends fuse this with the
+    model step so neither logits nor logprobs round-trip the host
+    separately. Returns ((R,) int32 tokens, (R,) f32 logprobs)."""
+    toks = sample_tokens(logits, keys, t, temperature, top_k, top_p)
+    return toks, token_logprobs(logits, toks)

@@ -86,3 +86,25 @@ def paged_prefill_attention(q, k_codes, k_scale, v_codes, v_scale, pool_pos,
     start = first_call_position(q_pos)
     return _ppa(q, k_codes, k_scale, v_codes, v_scale, pool_pos, block_table,
                 q_pos, start, k_fresh, v_fresh, q_block, interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def varlen_attention(q, k_codes, k_scale, v_codes, v_scale, pool_pos,
+                     block_table, q_pos, tok_slot, k_fresh, v_fresh,
+                     interpret: bool | None = None):
+    """Token-packed varlen page walk: ONE flat batch q (K,T,G,hd) whose rows
+    carry their own slot id and position, so ragged prefill chunks and
+    single decode tokens coexist in one call. Attends each row's pool
+    history (stored positions below its slot's first in-call position) plus
+    the call's fresh k/v (K,T,hd) under a block-diagonal causal mask.
+    ``start`` is derived from (q_pos, tok_slot) here so kernel and callers
+    can never disagree on it."""
+    from repro.kernels.varlen_attention import (
+        segment_start, varlen_attention as _va)
+
+    interpret = _default_interpret() if interpret is None else interpret
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    tok_slot = jnp.asarray(tok_slot, jnp.int32)
+    start = segment_start(q_pos, tok_slot, block_table.shape[0])
+    return _va(q, k_codes, k_scale, v_codes, v_scale, pool_pos, block_table,
+               q_pos, tok_slot, start, k_fresh, v_fresh, interpret)

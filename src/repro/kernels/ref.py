@@ -127,3 +127,47 @@ def paged_prefill_attention_ref(q, k_codes, k_scale, v_codes, v_scale,
     out = jnp.einsum("rksge,rked->rksgd", p, v_all)
     any_valid = jnp.any(valid, axis=-1)  # (R, S)
     return jnp.where(any_valid[:, None, :, None, None], out, 0.0)
+
+
+def varlen_attention_ref(q, k_codes, k_scale, v_codes, v_scale, pool_pos,
+                         block_table, q_pos, tok_slot, start,
+                         k_fresh, v_fresh):
+    """Dense oracle for the token-packed VARLEN kernel.
+
+    q (K,T,G,hd) — one flat token batch; q_pos/tok_slot (T,) per-token
+    positions and slot ids (-1 pads); start (R,) per-slot first in-call
+    position; pool + block_table as the pool holds them; fresh k/v (K,T,hd)
+    → (K,T,G,hd) f32.
+
+    Each token row gathers ITS slot's pages dense, masked to stored
+    positions < start[slot] (this call's own pool writes excluded), and
+    attends the call's fresh keys under a block-diagonal causal mask (same
+    slot, q_pos[col] <= q_pos[row]). Pad rows emit exact zeros."""
+    kh, t, g, hd = q.shape
+    slu = jnp.maximum(tok_slot, 0)
+    kd = gather_pages_ref(k_codes, block_table)  # (R, K, Sp, hd)
+    vd = gather_pages_ref(v_codes, block_table)
+    ks = gather_pages_ref(k_scale, block_table)
+    vs = gather_pages_ref(v_scale, block_table)
+    k_hist = (kd.astype(jnp.float32) * ks[..., None])[slu]  # (T, K, Sp, hd)
+    v_hist = (vd.astype(jnp.float32) * vs[..., None])[slu]
+    hist_pos = gather_pages_ref(pool_pos, block_table)[slu]  # (T, Sp)
+    ok_hist = ((tok_slot[:, None] >= 0) & (hist_pos >= 0)
+               & (hist_pos < start[slu][:, None]))  # (T, Sp)
+    ok_fresh = ((tok_slot[None, :] == tok_slot[:, None])
+                & (tok_slot[None, :] >= 0) & (q_pos[None, :] >= 0)
+                & (q_pos[None, :] <= q_pos[:, None]))  # (T, T)
+    k_fr = jnp.broadcast_to(jnp.swapaxes(k_fresh, 0, 1)[None],
+                            (t, t, kh, hd)).swapaxes(1, 2)  # (T, K, T, hd)
+    v_fr = jnp.broadcast_to(jnp.swapaxes(v_fresh, 0, 1)[None],
+                            (t, t, kh, hd)).swapaxes(1, 2)
+    k_all = jnp.concatenate([k_hist, k_fr.astype(jnp.float32)], axis=2)
+    v_all = jnp.concatenate([v_hist, v_fr.astype(jnp.float32)], axis=2)
+    valid = jnp.concatenate([ok_hist, ok_fresh], axis=1)  # (T, Sp+T)
+    s = jnp.einsum("ktgd,tked->ktge", q.astype(jnp.float32) / (hd ** 0.5),
+                   k_all, preferred_element_type=jnp.float32)
+    s = jnp.where(valid[None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("ktge,tked->ktgd", p, v_all)
+    any_valid = jnp.any(valid, axis=-1)  # (T,)
+    return jnp.where(any_valid[None, :, None, None], out, 0.0)

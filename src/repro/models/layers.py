@@ -243,7 +243,8 @@ def cache_update(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
 
 
 def paged_cache_update(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
-                       positions: jax.Array) -> PagedKVCache:
+                       positions: jax.Array,
+                       slots: jax.Array | None = None) -> PagedKVCache:
     """Scatter ``k_new``/``v_new`` (R, S_new, K, hd) into the shared pool.
 
     ``positions`` (R, S_new) carries each token's ABSOLUTE position; negative
@@ -257,15 +258,23 @@ def paged_cache_update(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
     positions of a request hit distinct (page, slot) pairs, so every valid
     scatter index is unique. Quantization is the same per-(token, head) int8
     transform as the dense cache (bit-identical codes — the dense↔paged
-    parity tests rely on this)."""
+    parity tests rely on this).
+
+    ``slots`` (R, S_new) switches to SEGMENT-AWARE scatter for the
+    token-packed varlen path: each token's block-table row is its own slot
+    id rather than its batch row (the packed call's batch dim is 1 while
+    its tokens span many requests). Tokens with slot -1 are pads."""
     page = cache.page_size
     r, s_new = positions.shape
     nbt = cache.block_table.shape[1]
     valid = (positions >= 0) & (positions < nbt * page)
     page_idx = jnp.where(valid, positions // page, 0)
-    pages = jnp.where(valid,
-                      jnp.take_along_axis(cache.block_table, page_idx, axis=1),
-                      0)
+    if slots is None:
+        pages = jnp.take_along_axis(cache.block_table, page_idx, axis=1)
+    else:
+        valid = valid & (slots >= 0)
+        pages = cache.block_table[jnp.maximum(slots, 0), page_idx]
+    pages = jnp.where(valid, pages, 0)
     # a position whose block-table entry is still 0 (page not yet allocated)
     # must not store a real pos on the shared trash page — every request's
     # unused table entries point there, so it would leak across requests
@@ -552,6 +561,49 @@ def paged_decode_attention_layer(q, cache: PagedKVCache, spec, q_positions, *,
                              q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
+def varlen_attention_layer(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
+                           q_positions, token_slots, *,
+                           use_kernel: bool = True):
+    """Token-packed VARLEN attention through the pool — the packed tick's
+    entry. ONE flat batch (batch dim 1) whose tokens span many requests:
+    q (1, T, H, hd), per-token ``q_positions``/``token_slots`` (1, T), the
+    call's fresh k/v (1, T, K, hd). Each token attends its own slot's pool
+    history (stored positions below the slot's first in-call position) plus
+    the causally-ordered fresh keys of its own segment; pad rows (slot -1)
+    emit exact zeros. ``cache`` must be the post-update pool, exactly like
+    :func:`paged_prefill_attention`.
+
+    The default path is the Pallas ``kernels.varlen_attention`` page walk;
+    softcapped / windowed layers have no varlen route (the packed scheduler
+    refuses such models up front), and ``use_kernel=False`` falls back to
+    the dense ``kernels.ref`` oracle — correct, not fast."""
+    if spec.attn_softcap is not None or spec.sliding_window is not None:
+        raise NotImplementedError(
+            "the token-packed varlen path requires kernel-eligible "
+            "attention (no softcap, no sliding window)")
+    b, t, h, hd = q.shape
+    kh = cache.k.shape[1]
+    qk = q.reshape(t, kh, h // kh, hd).transpose(1, 0, 2, 3)  # (K, T, G, hd)
+    kf = jnp.swapaxes(k_fresh.reshape(t, kh, hd), 0, 1)  # (K, T, hd)
+    vf = jnp.swapaxes(v_fresh.reshape(t, kh, hd), 0, 1)
+    qp = jnp.asarray(q_positions, jnp.int32).reshape(-1)
+    sl = jnp.asarray(token_slots, jnp.int32).reshape(-1)
+    if use_kernel:
+        from repro.kernels.ops import varlen_attention as _kernel
+
+        out = _kernel(qk, cache.k, cache.k_scale, cache.v, cache.v_scale,
+                      cache.pos, cache.block_table, qp, sl, kf, vf)
+    else:
+        from repro.kernels.ref import varlen_attention_ref
+        from repro.kernels.varlen_attention import segment_start
+
+        start = segment_start(qp, sl, cache.block_table.shape[0])
+        out = varlen_attention_ref(qk, cache.k, cache.k_scale, cache.v,
+                                   cache.v_scale, cache.pos,
+                                   cache.block_table, qp, sl, start, kf, vf)
+    return out.transpose(1, 0, 2, 3).reshape(b, t, h, hd).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Attention layer (projections + rope + cache plumbing)
 # ---------------------------------------------------------------------------
@@ -577,7 +629,7 @@ def init_attention_params(key, d_model: int, num_heads: int, num_kv_heads: int,
 def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | None,
                     pos, q_positions, q_chunk=1024, kv_chunk=1024,
                     decode: bool = False, attend_cache: bool = False,
-                    prefill_kernel: bool = True):
+                    prefill_kernel: bool = True, token_slots=None):
     """One attention layer.
 
     ``rope_cs``: (cos, sin) tables for the query positions, or None.
@@ -588,7 +640,10 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
     ``decode=True`` attends through the cache — except ``attend_cache=True``
     on a paged cache, which prefills THROUGH the pool (shared-prefix
     suffix prefill: history pages + fresh k/v, see
-    :func:`paged_prefill_attention`). Returns (output, new_cache)."""
+    :func:`paged_prefill_attention`), and ``token_slots`` on a paged cache,
+    which routes the token-packed VARLEN path (per-token block-table rows
+    for a flat mixed prefill/decode batch, see
+    :func:`varlen_attention_layer`). Returns (output, new_cache)."""
     b, s, d = x.shape
     h, kh, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
     q = (x @ params["wq"]).reshape(b, s, h, hd)
@@ -606,10 +661,14 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
     if cache is not None:
         if isinstance(cache, PagedKVCache):
             # paged pool: positions are per-token (ragged prefill pads < 0)
-            new_cache = paged_cache_update(cache, k, v, q_positions)
+            new_cache = paged_cache_update(cache, k, v, q_positions,
+                                           slots=token_slots)
         else:
             new_cache = cache_update(cache, k, v, pos, spec.sliding_window)
-    if cache is not None and decode:
+    if token_slots is not None and isinstance(new_cache, PagedKVCache):
+        out = varlen_attention_layer(q, new_cache, k, v, spec, q_positions,
+                                     token_slots, use_kernel=prefill_kernel)
+    elif cache is not None and decode:
         if isinstance(new_cache, PagedKVCache):
             out = paged_decode_attention_layer(
                 q, new_cache, spec, q_positions,

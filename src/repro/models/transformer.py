@@ -200,7 +200,8 @@ def apply_head(cfg: ArchConfig, params, x):
 
 
 def _apply_layer(cfg, ls: LayerSpec, p, x, *, rope_cs, q_positions, cache, pos,
-                 opts: RuntimeOpts, decode: bool, attend_cache: bool = False):
+                 opts: RuntimeOpts, decode: bool, attend_cache: bool = False,
+                 token_slots=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
     if isinstance(ls.mixer, AttnSpec):
@@ -208,7 +209,7 @@ def _apply_layer(cfg, ls: LayerSpec, p, x, *, rope_cs, q_positions, cache, pos,
             p["mixer"], h, ls.mixer, rope_cs=rope_cs, cache=cache, pos=pos,
             q_positions=q_positions, q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
             decode=decode, attend_cache=attend_cache,
-            prefill_kernel=opts.paged_prefill_kernel)
+            prefill_kernel=opts.paged_prefill_kernel, token_slots=token_slots)
     else:
         conv_state, ssm_state = cache if cache is not None else (None, None)
         out, new_cache = ssm_layer(p["mixer"], h, ls.mixer,
@@ -263,7 +264,7 @@ def _apply_blocks_train(cfg, blocks, x, *, rope_cs, q_positions, opts: RuntimeOp
 
 def _apply_blocks_cached(cfg, blocks, x, caches, *, rope_cs, q_positions, pos,
                          opts: RuntimeOpts, decode: bool,
-                         attend_cache: bool = False):
+                         attend_cache: bool = False, token_slots=None):
     """Caches ride in the scan CARRY (sliced per block by index, written back
     with dynamic_update_slice) rather than as xs→ys: carries can be buffer-
     aliased/donated, so a serve step updates the multi-GB cache in place —
@@ -280,7 +281,8 @@ def _apply_blocks_cached(cfg, blocks, x, caches, *, rope_cs, q_positions, pos,
             x, nc, _ = _apply_layer(cfg, ls, p_slice[f"p{pi}"], x,
                                     rope_cs=rope_cs, q_positions=q_positions,
                                     cache=cache_i, pos=pos, opts=opts,
-                                    decode=decode, attend_cache=attend_cache)
+                                    decode=decode, attend_cache=attend_cache,
+                                    token_slots=token_slots)
             new_caches.append(jax.tree_util.tree_map(
                 lambda full, sl: jax.lax.dynamic_update_slice_in_dim(
                     full, sl[None].astype(full.dtype), i, axis=0),
@@ -450,3 +452,31 @@ def paged_decode_step(params, cfg: ArchConfig, tokens, caches, pos,
                                      pos=jnp.int32(0), opts=opts, decode=True)
     logits = apply_head(cfg, params, x)
     return logits[:, 0], caches
+
+
+def packed_step(params, cfg: ArchConfig, tokens, caches, positions, slots,
+                logit_rows, opts: RuntimeOpts = RuntimeOpts()):
+    """ONE token-packed step over the paged pool: the whole tick — every
+    decoding slot's next token AND up-to-budget prefill-chunk tokens — as a
+    single flat batch.
+
+    ``tokens``/``positions``/``slots`` are (1, T): a fixed ``token_budget``
+    buffer laid out slot-major (each active slot owns one contiguous run —
+    a length-1 run for a decode token, a longer one for a prefill chunk),
+    tail-padded with ``positions = slots = -1`` rows whose cache writes
+    land on the trash page and whose attention emits exact zeros.
+    ``logit_rows`` (R,) names the buffer row holding each slot's LAST token
+    (any row for absent slots — their logits are garbage the scheduler
+    never samples), so logits keep the ``(R, V)`` shape the per-slot
+    sampling operand lanes expect. Returns (logits (R, V), caches)."""
+    positions = jnp.asarray(positions, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    x = embed_inputs(cfg, params, tokens, None, jnp.maximum(positions, 0))
+    rope_cs = rope_tables(cfg, positions)
+    x, caches = _apply_blocks_cached(cfg, params["blocks"], x, caches,
+                                     rope_cs=rope_cs, q_positions=positions,
+                                     pos=jnp.int32(0), opts=opts, decode=False,
+                                     token_slots=slots)
+    xl = jnp.take(x[0], jnp.asarray(logit_rows, jnp.int32), axis=0)  # (R, D)
+    logits = apply_head(cfg, params, xl[None])
+    return logits[0], caches

@@ -71,6 +71,10 @@ class TokenEvent:
     token: int  # -1 on the finish marker
     finished: bool = False
     finish_reason: str | None = None  # set only on the finish marker
+    # the emitted token's log-probability under the RAW model distribution
+    # (before temperature / top-k / top-p — core.sampling.token_logprobs);
+    # None on finish markers and abort events
+    logprob: float | None = None
 
 
 @dataclasses.dataclass
@@ -192,8 +196,8 @@ class _ReplayBackend(_RequestBook):
         super().__init__()
         self._next_rid = 0
         self._queued: list = []
-        # rid → [tokens np, cursor, finish_reason] for computed-but-not-
-        # fully-streamed requests
+        # rid → [tokens np, cursor, finish_reason, logprobs np | None] for
+        # computed-but-not-fully-streamed requests
         self._streams: dict = {}
         self._split_stats: dict = {}
 
@@ -222,7 +226,7 @@ class _ReplayBackend(_RequestBook):
                     rid, 0, -1, finished=True, finish_reason="abort"))
                 return True
         if rid in self._streams:
-            toks, cur, _ = self._streams.pop(rid)
+            toks, cur, _, _ = self._streams.pop(rid)
             self._finalize(rid, toks[:cur], "abort")
             self._pending_events.append(TokenEvent(
                 rid, cur, -1, finished=True, finish_reason="abort"))
@@ -241,12 +245,14 @@ class _ReplayBackend(_RequestBook):
         events, self._pending_events = self._pending_events, []
         now = time.time()
         for rid in list(self._streams):
-            toks, cur, reason = self._streams[rid]
+            toks, cur, reason, lps = self._streams[rid]
             if cur < len(toks):
                 m = self._metrics[rid]
                 if m.ttft_s is None:
                     m.ttft_s = now - m.submit_s
-                events.append(TokenEvent(rid, cur, int(toks[cur])))
+                lp = None if lps is None else float(lps[cur])
+                events.append(TokenEvent(rid, cur, int(toks[cur]),
+                                         logprob=lp))
                 cur += 1
                 self._streams[rid][1] = cur
             if cur >= len(toks):
@@ -285,11 +291,13 @@ class FusedBackend(_ReplayBackend):
             prompts = np.stack([r.prompt for r in group])
             res = self.engine.generate_requests(
                 prompts, [r.sampling for r in group])
-            for row, req in zip(res.tokens, group):
+            for i, (row, req) in enumerate(zip(res.tokens, group)):
                 plen = req.prompt.shape[0]
                 gen = row[plen: plen + req.sampling.max_tokens]
                 gen, reason = _apply_stop(gen, req.sampling)
-                self._streams[req.rid] = [gen, 0, reason]
+                lps = (None if res.logprobs is None
+                       else res.logprobs[i, : gen.shape[0]])
+                self._streams[req.rid] = [gen, 0, reason, lps]
 
 
 class SplitBackend(_ReplayBackend):
@@ -314,15 +322,16 @@ class SplitBackend(_ReplayBackend):
         if self._queued and not self._streams:
             req = self._queued.pop(0)
             sp = req.sampling
-            toks, stats = self.engine.generate(
+            toks, stats, lps = self.engine.generate(
                 req.prompt[None], sp.max_tokens, compress=self.compress,
-                sampling=sp)
+                sampling=sp, with_logprobs=True)
             gen = toks[0, req.prompt.shape[0]:]
             gen, reason = _apply_stop(gen, sp)
             if reason == "length" and gen.shape[0] < sp.max_tokens:
                 reason = "deadline"  # Algorithm 2 cut the generation short
             self._split_stats[req.rid] = stats
-            self._streams[req.rid] = [gen, 0, reason]
+            self._streams[req.rid] = [gen, 0, reason,
+                                      lps[0, : gen.shape[0]]]
         return self._emit_round()
 
 
@@ -370,11 +379,11 @@ class PagedBackend(_RequestBook):
 
     def _collect(self, now: float) -> list:
         sched, events = self.scheduler, []
-        for rid, idx, tok in sched.drain_events():
+        for rid, idx, tok, lp in sched.drain_events():
             m = self._metrics[rid]
             if m.ttft_s is None:
                 m.ttft_s = now - m.submit_s
-            events.append(TokenEvent(rid, idx, tok))
+            events.append(TokenEvent(rid, idx, tok, logprob=lp))
         for rid in sched.drain_finished():
             req = self._reqs[rid]
             reason = sched.finish_reasons.get(rid, "length")

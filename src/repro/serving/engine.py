@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.sampling import (broadcast_params, device_operands,
-                                 sample_tokens)
+                                 sample_tokens, token_logprobs)
 from repro.models.transformer import RuntimeOpts, decode_step, prefill
 
 
@@ -31,6 +31,10 @@ from repro.models.transformer import RuntimeOpts, decode_step, prefill
 class GenerationResult:
     tokens: np.ndarray  # (B, prompt + generated)
     steps: int
+    # (B, generated) f32 — each emitted token's log-probability under the
+    # raw model distribution (core.sampling.token_logprobs); None only for
+    # zero-step generations
+    logprobs: np.ndarray | None = None
 
 
 def _fused_generate(params, cfg, opts, cache_len, max_new, tokens, patches,
@@ -39,25 +43,32 @@ def _fused_generate(params, cfg, opts, cache_len, max_new, tokens, patches,
     ``lax.scan`` of ``max_new - 1`` decode steps whose carry is (logits,
     caches, pos), and ``sample(logits, t)`` — t the 0-based index of the
     token being drawn — called inside the scan so nothing crosses to the
-    host between steps. Returns (B, prompt + max_new) tokens."""
+    host between steps. Each drawn token's raw-distribution logprob is
+    computed in the scan too — the logits it needs are already in the
+    carry, so the tokens themselves are untouched (greedy stays
+    bit-identical to the logprob-less loop). Returns
+    ((B, prompt + max_new) tokens, (B, max_new) logprobs)."""
     b, s = tokens.shape[:2]
     logits, caches = prefill(params, cfg, tokens, patches, cache_len, opts)
 
     def body(carry, t):
         logits, caches, pos = carry
         nxt = sample(logits, t)
+        lp = token_logprobs(logits, nxt)
         tok = nxt[:, None].astype(tokens.dtype)
         logits, caches = decode_step(params, cfg, tok, caches, pos, opts)
-        return (logits, caches, pos + 1), nxt
+        return (logits, caches, pos + 1), (nxt, lp)
 
     # max_new - 1 decode steps; the last sampled token needs no step
-    (logits, caches, _), toks = jax.lax.scan(
+    (logits, caches, _), (toks, lps) = jax.lax.scan(
         body, (logits, caches, jnp.int32(s)),
         jnp.arange(max_new - 1, dtype=jnp.int32))
     last = sample(logits, jnp.int32(max_new - 1))
+    last_lp = token_logprobs(logits, last)
     toks = jnp.concatenate([toks, last[None]], axis=0)
+    lps = jnp.concatenate([lps, last_lp[None]], axis=0)
     toks = jnp.moveaxis(toks, 0, 1).astype(tokens.dtype)
-    return jnp.concatenate([tokens, toks], axis=1)
+    return jnp.concatenate([tokens, toks], axis=1), jnp.moveaxis(lps, 0, 1)
 
 
 class Engine:
@@ -71,8 +82,8 @@ class Engine:
 
     def generate_fn(self, max_new_tokens: int, greedy: bool = True):
         """The fused loop: jitted ``fn(params, tokens, patches, rng,
-        temperature) → (B, prompt + max_new_tokens) tokens``, everything on
-        device. Temperature is a traced operand (ignored when ``greedy``), so
+        temperature) → ((B, prompt + max_new_tokens) tokens,
+        (B, max_new_tokens) logprobs)``, everything on device. Temperature is a traced operand (ignored when ``greedy``), so
         per-request temperatures don't recompile the loop;
         (max_new_tokens, greedy) plus the engine's current ``cache_len`` and
         ``opts`` key the compile cache — the closure bakes both in, so keying
@@ -164,8 +175,9 @@ class Engine:
         bucket = min(1 << (max_new - 1).bit_length(), self.cache_len - s)
         fn = self.request_fn(bucket, greedy=all(p.greedy for p in sampling))
         keys, temp, tk, tp = device_operands(sampling)
-        out = fn(self.params, tokens, None, keys, temp, tk, tp)
-        return GenerationResult(np.asarray(out[:, : s + max_new]), max_new)
+        out, lps = fn(self.params, tokens, None, keys, temp, tk, tp)
+        return GenerationResult(np.asarray(out[:, : s + max_new]), max_new,
+                                logprobs=np.asarray(lps[:, :max_new]))
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  temperature: float = 0.0, patches=None, seed: int = 0,
@@ -183,12 +195,13 @@ class Engine:
         bucket = min(1 << (max_new_tokens - 1).bit_length(),
                      self.cache_len - s)
         fn = self.generate_fn(bucket, greedy=temperature <= 0)
-        out = fn(self.params, tokens,
-                 None if patches is None else jnp.asarray(patches),
-                 jax.random.PRNGKey(seed),
-                 jnp.float32(max(temperature, 1e-6)))
+        out, lps = fn(self.params, tokens,
+                      None if patches is None else jnp.asarray(patches),
+                      jax.random.PRNGKey(seed),
+                      jnp.float32(max(temperature, 1e-6)))
         return GenerationResult(np.asarray(out[:, : s + max_new_tokens]),
-                                max_new_tokens)
+                                max_new_tokens,
+                                logprobs=np.asarray(lps[:, :max_new_tokens]))
 
 
 def serve_step_fn(cfg: ArchConfig, opts: RuntimeOpts):

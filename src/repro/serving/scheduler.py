@@ -26,7 +26,19 @@ Lifecycle per request (see ``serving/README.md``):
             FORK — their block tables alias the pinned pages (refcount +1
             each) and only suffix pages (plus one CoW boundary copy when
             the prefix is not page-aligned) are newly allocated
-  prefill — two policies (``prefill_mode=``):
+  prefill — three tick shapes (``tick_mode=``, defaulting to
+            ``prefill_mode`` for the two legacy values):
+              * "packed" — ONE token-packed call serves the whole tick:
+                every decoding slot's next token AND up-to-budget
+                prefill-chunk tokens ride in a single flat
+                ``(1, token_budget)`` buffer (each slot one contiguous
+                segment — a decode token is a length-1 segment), attended
+                in one pass by the Pallas ``kernels.varlen_attention``
+                page walk and sampled through the same per-slot operand
+                lanes (``models.transformer.packed_step``). One compiled
+                shape, one dispatch per tick, pad limited to the buffer's
+                tail — see serving/README.md for the segment layout
+            and two legacy prefill policies (``prefill_mode=``):
               * "chunked" (default, Sarathi-style) — every prompt is split
                 into fixed ``prefill_chunk``-token pieces and each tick
                 advances every mid-prefill slot by ONE chunk through a
@@ -85,8 +97,9 @@ sampled token ids cross to the host for bookkeeping). Greedy rows
 (``temperature <= 0`` or ``top_k == 1``) take the exact argmax lane.
 Per-request STOP-TOKEN SETS (``SamplingParams.stop_set``) finish a
 request mid-stream, and ``abort(rid)`` cancels one wherever it is —
-queued, mid-prefill, or decoding. Per-token events stream out through
-``drain_events()`` (consumed by ``serving.api.LLMServer``).
+queued, mid-prefill, or decoding. Per-token events — each carrying the
+token's log-probability under the raw model distribution — stream out
+through ``drain_events()`` (consumed by ``serving.api.LLMServer``).
 
 The tick loop itself stays host-orchestrated: what this scheduler buys is
 MEMORY — shared prefixes are resident once however many requests attach,
@@ -106,10 +119,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.sampling import (SamplingParams, sample_tokens,
+from repro.core.sampling import (SamplingParams, sample_tokens_with_logprobs,
                                  truncate_at_stop)
-from repro.models.transformer import (RuntimeOpts, paged_decode_step,
-                                      paged_prefill, paged_prefill_shared)
+from repro.models.transformer import (RuntimeOpts, packed_step,
+                                      paged_decode_step, paged_prefill,
+                                      paged_prefill_shared)
 from repro.serving.kv_pool import (DEFAULT_PAGE_SIZE, PagedKVPool,
                                    PoolExhaustedError, SharedPrefix)
 
@@ -210,8 +224,13 @@ class SchedulerStats:
     peak_eq2_bytes: int = 0  # logical per-request Eq. 2 bytes
     peak_shared_pages: int = 0  # pages with refcount > 1
     peak_swap_bytes: int = 0  # host bytes held by swapped-out snapshots
-    compiled_shapes: int = 0  # distinct jitted step shapes seen (chunked
-    #                           mode stays O(1); wave mode grows per bucket)
+    compiled_shapes: int = 0  # distinct jitted step shapes seen (packed
+    #                           mode is exactly 1; chunked stays O(1); wave
+    #                           grows per bucket)
+    packed_ticks: int = 0  # token-packed calls dispatched (packed mode)
+    packed_tokens: int = 0  # live tokens those calls carried
+    packed_pad_tokens: int = 0  # tail-pad rows they carried (pad fraction
+    #                             = packed_pad_tokens / (packed_ticks * T))
     # rid → ticks from submit to the first sampled token (TTFT in ticks)
     ttft_ticks: dict = dataclasses.field(default_factory=dict)
     # chunk size → ticks it was picked (adaptive prefill_chunk="auto")
@@ -249,7 +268,18 @@ class Scheduler:
     preempted request is held in the queue that many extra ticks before
     re-admission while other work runs, so an evict→re-admit→evict swap
     storm can't oscillate tick over tick (0 restores the immediate
-    re-admit)."""
+    re-admit).
+
+    ``tick_mode="packed"`` replaces the per-tick prefill call(s) + decode
+    call pair with ONE token-packed ``packed_step`` over a flat
+    ``(1, token_budget)`` buffer (see module doc); ``"chunked"`` and
+    ``"wave"`` keep the legacy two-phase tick. The default (None) follows
+    ``prefill_mode`` so existing callers are untouched. ``token_budget``
+    (packed mode) is the buffer's fixed token count — it must cover every
+    decoding slot plus at least one prefill token, so it is clamped to
+    ``>= max_slots + 1``; the default ``prefill_chunk + max_slots`` gives
+    prefill the same per-tick bandwidth as one chunked-mode chunk even at
+    full decode occupancy."""
 
     def __init__(self, cfg: ArchConfig, params,
                  opts: RuntimeOpts = RuntimeOpts(),
@@ -258,12 +288,20 @@ class Scheduler:
                  lazy_growth: bool = False, resume: str = "swap",
                  prefill_mode: str = "chunked",
                  prefill_chunk: int | str | tuple = 256,
-                 preempt_cooldown: int = 1):
+                 preempt_cooldown: int = 1, tick_mode: str | None = None,
+                 token_budget: int | None = None):
         if resume not in ("swap", "refill"):
             raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
         if prefill_mode not in ("chunked", "wave"):
             raise ValueError(
                 f"prefill_mode must be 'chunked' or 'wave', got {prefill_mode}")
+        if tick_mode is None:
+            tick_mode = prefill_mode
+        if tick_mode not in ("packed", "chunked", "wave"):
+            raise ValueError(f"tick_mode must be 'packed', 'chunked' or "
+                             f"'wave', got {tick_mode}")
+        if tick_mode != "packed":
+            prefill_mode = tick_mode
         if prefill_chunk == "auto":
             ladder = AUTO_CHUNK_LADDER
         elif isinstance(prefill_chunk, (tuple, list)):
@@ -280,10 +318,15 @@ class Scheduler:
         self.lazy_growth = lazy_growth
         self.resume = resume
         self.prefill_mode = prefill_mode
+        self.tick_mode = tick_mode
         # no prompt can exceed the block table's reach, so neither need a chunk
         reach = self.pool.max_blocks * page_size
         self._chunk_ladder = tuple(sorted({min(c, reach) for c in ladder}))
         self.prefill_chunk = self._chunk_ladder[-1]
+        if token_budget is None:
+            token_budget = self.prefill_chunk + max_slots
+        # every decoding slot needs a row, plus >= 1 for prefill progress
+        self.token_budget = max(int(token_budget), max_slots + 1)
         self.preempt_cooldown = preempt_cooldown
         self._tick = 0
         self._shapes: set = set()  # distinct jitted call shapes dispatched
@@ -321,13 +364,38 @@ class Scheduler:
 
         def decode_sample(params, tokens, caches, pos, keys, t, temp, tk, tp):
             # decode + sampling as ONE jitted function: logits never leave
-            # the device — only the sampled token ids cross to the host
+            # the device — only the sampled token ids (and their logprobs)
+            # cross to the host
             logits, new_caches = paged_decode_step(params, cfg, tokens,
                                                    caches, pos, opts)
-            return sample_tokens(logits, keys, t, temp, tk, tp), new_caches
+            toks, lps = sample_tokens_with_logprobs(logits, keys, t,
+                                                    temp, tk, tp)
+            return toks, lps, new_caches
 
         self._decode = jax.jit(decode_sample)
-        self._sample = jax.jit(sample_tokens)
+
+        def packed_sample(params, tokens, caches, positions, slots,
+                          logit_rows, keys, t, temp, tk, tp):
+            # the whole packed tick as ONE jitted function: embed → varlen
+            # attention over the int8 pages → per-slot sampling lanes
+            logits, new_caches = packed_step(params, cfg, tokens, caches,
+                                             positions, slots, logit_rows,
+                                             opts)
+            toks, lps = sample_tokens_with_logprobs(logits, keys, t,
+                                                    temp, tk, tp)
+            return toks, lps, new_caches
+
+        self._packed = jax.jit(packed_sample)
+        self._sample = jax.jit(sample_tokens_with_logprobs)
+
+        def sample_rows(logits, rows, keys, t, temp, tk, tp):
+            # wave-mode prefill samples a SUBSET of slot rows: gather the
+            # rows' lanes from the cached full-slot operands on device
+            # instead of rebuilding (R_adm,)-shaped host arrays per call
+            return sample_tokens_with_logprobs(
+                logits, keys[rows], t, temp[rows], tk[rows], tp[rows])
+
+        self._sample_rows = jax.jit(sample_rows)
 
     # -------------------------------------------------------------- intake
 
@@ -467,8 +535,10 @@ class Scheduler:
 
     def drain_events(self) -> list:
         """Return and clear the per-token events emitted since the last
-        call: ``(rid, token_index, token)`` tuples in emission order —
-        position order per request, interleaved across requests."""
+        call: ``(rid, token_index, token, logprob)`` tuples in emission
+        order — position order per request, interleaved across requests.
+        ``logprob`` is the token's log-probability under the row's raw
+        model distribution (``core.sampling.token_logprobs``)."""
         ev, self._events = self._events, []
         return ev
 
@@ -482,16 +552,30 @@ class Scheduler:
     # ------------------------------------------------------------ lifecycle
 
     def _set_ops(self, slot: int, req: Request) -> None:
-        """Install the request's sampling operands in its slot row."""
+        """Install the request's sampling operands in its slot row. A
+        WRITE happens only when the row's values actually change (slot
+        membership or per-request params): re-admitting the same request
+        after a swap, or a greedy request landing in a greedy-reset row,
+        keeps the uploaded device copy valid — steady-state ticks ship the
+        SAME device arrays with zero host work."""
         sp = req.sampling
-        self._op_keys[slot] = np.asarray(jax.random.PRNGKey(sp.seed),
-                                         np.uint32)
-        self._op_temp[slot] = sp.temperature
-        self._op_topk[slot] = sp.top_k
-        self._op_topp[slot] = sp.top_p
+        key = np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)
+        row = (key, np.float32(sp.temperature), np.int32(sp.top_k),
+               np.float32(sp.top_p))
+        if (np.array_equal(self._op_keys[slot], key)
+                and self._op_temp[slot] == row[1]
+                and self._op_topk[slot] == row[2]
+                and self._op_topp[slot] == row[3]):
+            return
+        (self._op_keys[slot], self._op_temp[slot], self._op_topk[slot],
+         self._op_topp[slot]) = row
         self._dev_ops = None
 
     def _reset_ops(self, slot: int) -> None:
+        if (self._op_temp[slot] == 0.0 and self._op_topk[slot] == 0
+                and self._op_topp[slot] == 1.0
+                and not self._op_keys[slot].any()):
+            return  # already the greedy reset row — keep the device copy
         self._op_keys[slot] = 0
         self._op_temp[slot] = 0.0
         self._op_topk[slot] = 0
@@ -588,13 +672,14 @@ class Scheduler:
             self._admit_seq += 1
         return admitted, restored
 
-    def _record_first_token(self, st: _SlotState, token: int) -> None:
+    def _record_first_token(self, st: _SlotState, token: int,
+                            logprob: float) -> None:
         """Seed the slot's first sampled token (resumed requests keep their
         already-emitted tokens — the last one is the next decode input, not
         a fresh sample) and record its TTFT."""
         if not st.generated:
             st.generated.append(token)
-            self._events.append((st.req.rid, 0, token))
+            self._events.append((st.req.rid, 0, token, logprob))
             self.stats.ttft_ticks.setdefault(
                 st.req.rid, self._tick - st.req.submit_tick)
 
@@ -636,37 +721,36 @@ class Scheduler:
             caches=self.pool.device_caches(rows=admitted),
             positions=jnp.asarray(posn))
         self.pool.update_from(new_caches)
-        first = self._sample_first(logits, admitted)
+        first, first_lp = self._sample_first(logits, admitted)
         for i, slot in enumerate(admitted):
             st = self.slots[slot]
             self.pool.commit_prefill(slot, int(toks[i].size))
             st.prefilled = int(toks[i].size)
-            self._record_first_token(st, int(first[i]))
+            self._record_first_token(st, int(first[i]), float(first_lp[i]))
             self._maybe_pin_prefix(st, slot)
         self.stats.prefills += 1
         self.stats.admitted += r
 
-    def _sample_first(self, logits, rows: list | None) -> np.ndarray:
+    def _sample_first(self, logits, rows: list | None) -> tuple:
         """Sample each row's FIRST token (generation index 0) from prefill
         logits with its own sampling operands — same device sampler, same
         per-request PRNG lane as the decode tick, so a request's stream is
         seamless across the prefill→decode boundary. ``rows`` are the slot
-        indices matching ``logits``'s rows (``None`` = all slots, served
-        from the cached device operands); rows that didn't finish their
-        prompt this call simply discard the sample."""
+        indices matching ``logits``'s rows (``None`` = all slots; a subset
+        gathers its rows' lanes from the same cached device operands —
+        the per-slot arrays are never rebuilt host-side per call); rows
+        that didn't finish their prompt this call simply discard the
+        sample. Returns (tokens, logprobs) as host arrays."""
+        keys, temp, tk, tp = self._device_ops()
         if rows is None:
-            keys, temp, tk, tp = self._device_ops()
-            n = self.max_slots
+            toks, lps = self._sample(logits, keys,
+                                     jnp.zeros((self.max_slots,), jnp.int32),
+                                     temp, tk, tp)
         else:
-            idx = np.asarray(rows, np.intp)
-            keys, temp, tk, tp = (jnp.asarray(self._op_keys[idx]),
-                                  jnp.asarray(self._op_temp[idx]),
-                                  jnp.asarray(self._op_topk[idx]),
-                                  jnp.asarray(self._op_topp[idx]))
-            n = len(rows)
-        return np.asarray(self._sample(logits, keys,
-                                       jnp.zeros((n,), jnp.int32),
-                                       temp, tk, tp))
+            toks, lps = self._sample_rows(
+                logits, jnp.asarray(np.asarray(rows, np.int32)), keys,
+                jnp.zeros((len(rows),), jnp.int32), temp, tk, tp)
+        return np.asarray(toks), np.asarray(lps)
 
     def _pick_chunk(self) -> int:
         """The tick's prefill chunk size. Fixed ladder of one → that size.
@@ -742,8 +826,9 @@ class Scheduler:
             self.pool.update_from(new_caches)
             # only dispatch the sampler on ticks where some row actually
             # completes its prompt — mid-prompt chunks discard the sample
-            first = self._sample_first(logits, None) \
-                if any(hi == total for hi, total in ends.values()) else None
+            first, first_lp = self._sample_first(logits, None) \
+                if any(hi == total for hi, total in ends.values()) \
+                else (None, None)
             for i in group:
                 st = self.slots[i]
                 hi, total = ends[i]
@@ -752,7 +837,8 @@ class Scheduler:
                 self.stats.prefill_chunks += 1
                 self._maybe_pin_prefix(st, i)
                 if hi == total:  # prompt complete → first token
-                    self._record_first_token(st, int(first[i]))
+                    self._record_first_token(st, int(first[i]),
+                                             float(first_lp[i]))
             self.stats.prefills += 1
         return True
 
@@ -818,14 +904,12 @@ class Scheduler:
         self.stats.preemptions += 1
         return True
 
-    def _decode_tick(self) -> None:
-        """One ragged decode step over EVERY slot (single compiled shape);
-        inactive rows — free slots AND slots still mid-prefill — carry
-        position -1 and are masked end-to-end, so prefill chunks and decode
-        share the tick without sharing a shape. In lazy mode, page-boundary
-        growth that exhausts the pool preempts before the step runs (the
-        victim's un-decoded tick is simply not taken — its resume
-        re-prefills from exactly the tokens it had emitted)."""
+    def _grow_decode_slots(self) -> None:
+        """Reserve one pool token for every slot about to decode this tick.
+        In lazy mode, page-boundary growth that exhausts the pool preempts
+        before the step runs (the victim's un-decoded tick is simply not
+        taken — its resume re-prefills from exactly the tokens it had
+        emitted)."""
         for i in range(self.max_slots):
             if self.slots[i] is None or self.slots[i].prefilling:
                 continue
@@ -841,6 +925,13 @@ class Scheduler:
                             f"cannot hold its worst case even alone")
                     if self.slots[i] is None:
                         break  # we were the victim; skip our own step
+
+    def _decode_tick(self) -> None:
+        """One ragged decode step over EVERY slot (single compiled shape);
+        inactive rows — free slots AND slots still mid-prefill — carry
+        position -1 and are masked end-to-end, so prefill chunks and decode
+        share the tick without sharing a shape."""
+        self._grow_decode_slots()
         active = [i for i, st in enumerate(self.slots)
                   if st is not None and not st.prefilling]
         if not active:
@@ -857,19 +948,101 @@ class Scheduler:
             pos[i] = int(self.pool.lengths[i]) - 1  # position being written
             t[i] = len(self.slots[i].generated)
         keys, temp, tk, tp = self._device_ops()
-        nxt, new_caches = self._decode(
+        nxt, lps, new_caches = self._decode(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(), pos=jnp.asarray(pos),
             keys=keys, t=jnp.asarray(t), temp=temp, tk=tk, tp=tp)
         self.pool.update_from(new_caches)
-        nxt = np.asarray(nxt)
+        nxt, lps = np.asarray(nxt), np.asarray(lps)
         for i in active:
             st = self.slots[i]
             st.generated.append(int(nxt[i]))
             self._events.append((st.req.rid, len(st.generated) - 1,
-                                 int(nxt[i])))
+                                 int(nxt[i]), float(lps[i])))
         self.stats.steps += 1
         self.stats.slot_ticks += len(active)
+
+    def _packed_tick(self) -> bool:
+        """ONE token-packed call for the whole tick: every decoding slot
+        contributes its next-token row and every mid-prefill slot up to the
+        remaining budget contributes its next chunk, laid out slot-major as
+        contiguous segments in a fixed ``(1, token_budget)`` buffer (tail
+        rows carry position/slot -1: their writes trash-route, their
+        attention emits exact zeros). The call embeds, runs the varlen
+        page-walk attention, gathers each slot's LAST row into ``(R, V)``
+        logits and samples through the per-slot operand lanes — prefill
+        chunks and decode tokens share one dispatch AND one compiled shape.
+        Returns whether any work was dispatched."""
+        self._grow_decode_slots()
+        decode_rows = [i for i, st in enumerate(self.slots)
+                       if st is not None and not st.prefilling]
+        t_budget = self.token_budget
+        tokens = np.zeros((1, t_budget), np.int32)
+        posn = np.full((1, t_budget), -1, np.int32)
+        slot_ids = np.full((1, t_budget), -1, np.int32)
+        logit_rows = np.zeros((self.max_slots,), np.int32)
+        t_idx = np.zeros((self.max_slots,), np.int32)
+        budget = t_budget - len(decode_rows)  # decode rows are never cut
+        cap = self._pick_chunk() if any(
+            st is not None and st.prefilling for st in self.slots) else 0
+        cur = 0
+        pieces = {}  # slot → (lo, hi, total) prefill piece taken this tick
+        for i in range(self.max_slots):
+            st = self.slots[i]
+            if st is None:
+                continue
+            if not st.prefilling:
+                tokens[0, cur] = st.generated[-1]
+                posn[0, cur] = int(self.pool.lengths[i]) - 1
+                slot_ids[0, cur] = i
+                logit_rows[i] = cur
+                t_idx[i] = len(st.generated)
+                cur += 1
+            elif budget > 0:
+                toks = st.req.prefill_tokens
+                lo = st.prefilled
+                hi = min(lo + min(cap, budget), toks.size)
+                n = hi - lo
+                tokens[0, cur:cur + n] = toks[lo:hi]
+                posn[0, cur:cur + n] = np.arange(lo, hi)
+                slot_ids[0, cur:cur + n] = i
+                logit_rows[i] = cur + n - 1
+                pieces[i] = (lo, hi, toks.size)
+                budget -= n
+                cur += n
+        if cur == 0:
+            return False
+        self._register_shape("packed", self.max_slots, t_budget)
+        keys, temp, tk, tp = self._device_ops()
+        nxt, lps, new_caches = self._packed(
+            self.params, jnp.asarray(tokens),
+            caches=self.pool.device_caches(), positions=jnp.asarray(posn),
+            slots=jnp.asarray(slot_ids), logit_rows=jnp.asarray(logit_rows),
+            keys=keys, t=jnp.asarray(t_idx), temp=temp, tk=tk, tp=tp)
+        self.pool.update_from(new_caches)
+        nxt, lps = np.asarray(nxt), np.asarray(lps)
+        for i, (lo, hi, total) in pieces.items():
+            st = self.slots[i]
+            self.pool.commit_prefill(i, hi)
+            st.prefilled = hi
+            self.stats.prefill_chunks += 1
+            self._maybe_pin_prefix(st, i)
+            if hi == total:  # prompt complete → first token
+                self._record_first_token(st, int(nxt[i]), float(lps[i]))
+        for i in decode_rows:
+            st = self.slots[i]
+            st.generated.append(int(nxt[i]))
+            self._events.append((st.req.rid, len(st.generated) - 1,
+                                 int(nxt[i]), float(lps[i])))
+        self.stats.packed_ticks += 1
+        self.stats.packed_tokens += cur
+        self.stats.packed_pad_tokens += t_budget - cur
+        if pieces:
+            self.stats.prefills += 1
+        if decode_rows:
+            self.stats.steps += 1
+            self.stats.slot_ticks += len(decode_rows)
+        return True
 
     def _evict_finished(self) -> None:
         for i, st in enumerate(self.slots):
@@ -902,15 +1075,42 @@ class Scheduler:
     def pending(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
+    def _fail_stuck_queue(self) -> bool:
+        """The batch is idle yet the queue head still doesn't fit: release
+        an idle pinned prefix and retry (returns True); if nothing is
+        releasable it never will fit — fail loudly instead of spinning
+        forever."""
+        if self._release_idle_prefix():
+            return True
+        req = self.queue[0]
+        need = self.pool.pages_for(self._admission_target(req))
+        kind = "for admission" if self.lazy_growth else "worst-case"
+        raise PoolExhaustedError(
+            f"request {req.rid} needs {need} pages {kind} but the "
+            f"whole pool has {self.pool.num_pages - 1} (max_blocks "
+            f"{self.pool.max_blocks}); it can never be admitted")
+
     def step(self) -> bool:
-        """One scheduler tick: admit, advance prefill (one fixed-size chunk
-        per mid-prefill slot, or the full wave in "wave" mode), evict
+        """One scheduler tick. Packed mode: admit, then ONE token-packed
+        call carrying every decode token and up-to-budget prefill tokens,
+        then evict. Chunked/wave modes: admit, advance prefill (one
+        fixed-size chunk per mid-prefill slot, or the full wave), evict
         anything that finished on its prefill token, decode the ragged
         batch, evict. Returns whether work remains."""
         self._tick += 1
         admitted, restored = self._admit_wave()
         if restored:
             self.stats.admitted += len(restored)
+        if self.tick_mode == "packed":
+            self.stats.admitted += len(admitted)
+            did = self._packed_tick()
+            if did or restored:
+                self._track_occupancy()
+                self._evict_finished()
+            elif (not admitted and not restored and self.queue
+                  and all(st is None for st in self.slots)):
+                self._fail_stuck_queue()
+            return self.pending
         did_prefill = False
         if self.prefill_mode == "wave":
             if admitted:
@@ -937,18 +1137,7 @@ class Scheduler:
             self._evict_finished()
         elif (not admitted and not restored and self.queue
               and all(st is None for st in self.slots)):
-            # idle batch yet the head still doesn't fit: release an idle
-            # pinned prefix and retry; if nothing is releasable it never
-            # will fit — fail loudly instead of spinning forever
-            if self._release_idle_prefix():
-                return self.pending
-            req = self.queue[0]
-            need = self.pool.pages_for(self._admission_target(req))
-            kind = "for admission" if self.lazy_growth else "worst-case"
-            raise PoolExhaustedError(
-                f"request {req.rid} needs {need} pages {kind} but the "
-                f"whole pool has {self.pool.num_pages - 1} (max_blocks "
-                f"{self.pool.max_blocks}); it can never be admitted")
+            self._fail_stuck_queue()
         return self.pending
 
     def run(self) -> dict:

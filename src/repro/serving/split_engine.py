@@ -28,7 +28,7 @@ from repro.configs.base import ArchConfig
 from repro.core.channel import ChannelConfig, LatencyModel, optimal_rate
 from repro.core.opsc import OPSCConfig, kv_cache_bytes
 from repro.core.sampling import (broadcast_params, device_operands,
-                                 sample_tokens)
+                                 sample_tokens, token_logprobs)
 from repro.core.payload import decode as payload_decode
 from repro.core.payload import encode as payload_encode
 from repro.models import layers as L
@@ -144,6 +144,8 @@ class SplitEngine:
             lambda lg, keys, t, temp, tk, tp: sample_tokens(
                 lg, keys, jnp.full((lg.shape[0],), t, jnp.int32),
                 temp, tk, tp)[:, None])
+        self._tok_lp = jax.jit(
+            lambda lg, tok: token_logprobs(lg, tok[:, 0])[:, None])
         self._seq_write = jax.jit(
             lambda buf, val, i: jax.lax.dynamic_update_slice(
                 buf, val.astype(buf.dtype), (0, i) + (0,) * (buf.ndim - 2)))
@@ -220,8 +222,13 @@ class SplitEngine:
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  compress: bool = True, shared_prefix_len: int = 0,
-                 sampling=None) -> tuple:
-        """Split-computing generation. Returns (tokens, SplitStats).
+                 sampling=None, with_logprobs: bool = False) -> tuple:
+        """Split-computing generation. Returns (tokens, SplitStats) — or
+        (tokens, SplitStats, logprobs (B, generated) f32) with
+        ``with_logprobs=True``: each emitted token's log-probability under
+        the raw cloud-head distribution (``core.sampling.token_logprobs``),
+        accumulated in a device buffer alongside the token matrix (the
+        existing two-tuple return is preserved for legacy callers).
 
         ``sampling`` — one ``core.sampling.SamplingParams`` (applied to
         every row) or a list of ``len(prompts)`` — threads the serving
@@ -371,6 +378,7 @@ class SplitEngine:
         h_buf = jnp.zeros((b, self.cache_len) + h.shape[2:], h.dtype)
         h_buf = self._seq_write(h_buf, h, jnp.int32(0))
         tok_buf = jnp.zeros((b, max_new_tokens) + tokens.shape[2:], tokens.dtype)
+        lp_buf = jnp.zeros((b, max_new_tokens), jnp.float32)
         n_hist = s
         n_out = 0
         i_kv = self.opsc.i_kv
@@ -383,6 +391,9 @@ class SplitEngine:
                 nxt = self._sample_next(logits, keys, jnp.int32(step), temp,
                                         tk, tp).astype(tokens.dtype)
             tok_buf = self._seq_write(tok_buf, nxt, jnp.int32(step))
+            if with_logprobs:
+                lp_buf = self._seq_write(lp_buf, self._tok_lp(logits, nxt),
+                                         jnp.int32(step))
             n_out = step + 1
             if step + 1 == max_new_tokens:
                 break
@@ -438,4 +449,7 @@ class SplitEngine:
             stats.tokens_generated += 1
 
         out = np.asarray(tok_buf[:, :n_out])
-        return np.concatenate([np.asarray(tokens), out], axis=1), stats
+        toks = np.concatenate([np.asarray(tokens), out], axis=1)
+        if with_logprobs:
+            return toks, stats, np.asarray(lp_buf[:, :n_out])
+        return toks, stats

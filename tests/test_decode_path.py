@@ -202,11 +202,12 @@ def test_engine_generate_has_no_host_transfer_in_loop():
     tokens = jax.ShapeDtypeStruct((3, 8), jnp.int32)
     key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     temp = jax.ShapeDtypeStruct((), jnp.float32)
-    out = jax.eval_shape(fn, params, tokens, None, key, temp)
+    out, lps = jax.eval_shape(fn, params, tokens, None, key, temp)
     assert out.shape == (3, 14)
+    assert lps.shape == (3, 6)  # per-token logprobs ride the same scan
     # the temperature-sampling branch traces too — and temperature is a
     # traced operand, so per-request temperatures share one compile
     fn_t = eng.generate_fn(max_new_tokens=4, greedy=False)
-    out = jax.eval_shape(fn_t, params, tokens, None, key, temp)
+    out, _ = jax.eval_shape(fn_t, params, tokens, None, key, temp)
     assert out.shape == (3, 12)
     assert fn_t is eng.generate_fn(max_new_tokens=4, greedy=False)
