@@ -105,3 +105,23 @@ def timeit_us(fn, n: int = 5) -> float:
     for _ in range(n):
         fn()
     return (time.time() - t0) / n * 1e6
+
+
+def telemetry_section(tracer) -> dict:
+    """The benchmark-artifact telemetry block: the tracer's flat metrics
+    plus the SLO percentiles benchmarks quote (TTFT/TPOT/tick latency).
+    Returns {} for ``tracer=None`` so callers can splice it in
+    unconditionally."""
+    if tracer is None:
+        return {}
+    m = tracer.metrics_dict()
+    slo = {}
+    for row in ("ttft_s", "tpot_s", "e2e_s", "tick.wall_s"):
+        if f"{row}.count" in m:
+            slo[row] = {q: m[f"{row}.{q}"] for q in ("p50", "p95", "p99")}
+    return {"telemetry": {
+        "spans": len(tracer.spans),
+        "ticks": len(tracer.ticks),
+        "slo": slo,
+        "metrics": m,
+    }}

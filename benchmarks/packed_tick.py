@@ -95,7 +95,7 @@ def _pad_fraction(sched, variant, prompt_tokens):
     return None
 
 
-def _serve(cfg, params, opts, jobs, prompts, variant, pages):
+def _serve(cfg, params, opts, jobs, prompts, variant, pages, telemetry=None):
     import numpy as np
 
     from repro.serving.scheduler import Scheduler
@@ -104,7 +104,7 @@ def _serve(cfg, params, opts, jobs, prompts, variant, pages):
     sched = Scheduler(cfg, params, opts, num_pages=pages,
                       page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
                       max_seq_len=max_seq, tick_mode=variant,
-                      prefill_chunk=CHUNK)
+                      prefill_chunk=CHUNK, telemetry=telemetry)
     rids = [sched.submit(p, mn) for p, (_, mn) in zip(prompts, jobs)]
     tick_walls = []
     t0 = time.time()
@@ -131,12 +131,16 @@ def _serve(cfg, params, opts, jobs, prompts, variant, pages):
     }
 
 
-def bench_packed_tick(smoke: bool = False):
+def bench_packed_tick(smoke: bool = False, trace: str | None = None):
     import numpy as np
 
     from repro.serving.engine import Engine
 
     cfg, params, opts = _build()
+    tracer = None
+    if trace is not None:
+        from repro.serving.telemetry import Tracer
+        tracer = Tracer()
     mixes = SMOKE_MIXES if smoke else MIXES
     rng = np.random.default_rng(0)
     rows, rec = [], {"config": {"arch": cfg.name, "page_size": PAGE_SIZE,
@@ -151,8 +155,12 @@ def bench_packed_tick(smoke: bool = False):
                 for p, (_, mn) in zip(prompts, jobs)]
         entry = {"requests": len(jobs)}
         for variant in ("packed", "chunked", "wave"):
+            # the tracer follows the packed variant only — one scheduler's
+            # slot tracks per trace, not three runs interleaved
             results, rids, m = _serve(cfg, params, opts, jobs, prompts,
-                                      variant, mix["pages"])
+                                      variant, mix["pages"],
+                                      telemetry=tracer
+                                      if variant == "packed" else None)
             m["outputs_match_baseline"] = all(
                 np.array_equal(results[r], w) for r, w in zip(rids, want))
             entry[variant] = m
@@ -175,6 +183,14 @@ def bench_packed_tick(smoke: bool = False):
         rows.append((f"packed_tick/{name}_gain", 0.0,
                      f"tput_x{entry['throughput_gain_vs_chunked']} "
                      f"tail_x{entry['tail_tick_reduction_vs_chunked']}"))
+    if tracer is not None:
+        from benchmarks.common import telemetry_section
+        rec.update(telemetry_section(tracer))
+        os.makedirs(os.path.dirname(os.path.abspath(trace)), exist_ok=True)
+        tracer.export_chrome_trace(trace)
+        rows.append((f"packed_tick/trace", 0.0,
+                     f"spans={len(tracer.spans)} ticks={len(tracer.ticks)} "
+                     f"-> {trace}"))
     os.makedirs(OUT_DIR, exist_ok=True)
     out = os.path.join(OUT_DIR, "packed_tick_smoke.json" if smoke
                        else "packed_tick.json")
@@ -187,8 +203,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one shrunken mix (CI packed-tick smoke step)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="serve the packed variant with a telemetry.Tracer "
+                         "and export a Chrome trace-event JSON here "
+                         "(inspect with tools/trace_report.py or Perfetto)")
     args = ap.parse_args()
-    for name, us, derived in bench_packed_tick(smoke=args.smoke):
+    for name, us, derived in bench_packed_tick(smoke=args.smoke,
+                                               trace=args.trace):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
 

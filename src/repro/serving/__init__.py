@@ -19,3 +19,5 @@ from repro.serving.kv_pool import (PagedKVPool,  # noqa: F401
                                    PoolExhaustedError)
 from repro.serving.scheduler import Request, Scheduler  # noqa: F401
 from repro.serving.split_engine import SplitEngine, SplitStats  # noqa: F401
+from repro.serving.telemetry import (Histogram, MetricsRegistry,  # noqa: F401
+                                     Span, TickRecord, Tracer)

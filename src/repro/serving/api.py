@@ -90,12 +90,17 @@ class GenerationRequest:
 @dataclasses.dataclass
 class RequestMetrics:
     """Wall-clock latency accounting per request (CPU wall times are
-    call-path numbers off-TPU; ``ttft_ticks`` is exact on any backend)."""
+    call-path numbers off-TPU; ``ttft_ticks`` is exact on any backend).
+    All times are ``time.perf_counter()`` stamps — monotonic, so they
+    never jump under wall-clock adjustments; ``submit_s`` is only
+    meaningful relative to other stamps from the same process."""
 
-    submit_s: float = 0.0  # wall clock at submit
+    submit_s: float = 0.0  # perf_counter stamp at submit
     ttft_s: float | None = None  # submit → first streamed token
     latency_s: float | None = None  # submit → finish
-    ttft_ticks: int | None = None  # scheduler ticks (paged backend only)
+    # scheduling quanta from submit to first token: scheduler ticks on the
+    # paged backend, server steps on the fused/split replay backends
+    ttft_ticks: int | None = None
 
 
 @dataclasses.dataclass
@@ -162,7 +167,9 @@ class _RequestBook:
     def _track(self, req: GenerationRequest, rid: int) -> int:
         req.rid = rid
         self._reqs[rid] = req
-        self._metrics[rid] = RequestMetrics(submit_s=time.time())
+        # perf_counter: monotonic — ttft_s/latency_s can never go negative
+        # or jump when the wall clock is adjusted mid-serve
+        self._metrics[rid] = RequestMetrics(submit_s=time.perf_counter())
         return rid
 
     def outputs(self) -> dict:
@@ -192,19 +199,27 @@ class _ReplayBackend(_RequestBook):
     the per-request position-order invariant and interleaves across
     requests)."""
 
-    def __init__(self):
+    def __init__(self, telemetry=None):
         super().__init__()
+        self.telemetry = telemetry
         self._next_rid = 0
         self._queued: list = []
         # rid → [tokens np, cursor, finish_reason, logprobs np | None] for
         # computed-but-not-fully-streamed requests
         self._streams: dict = {}
         self._split_stats: dict = {}
+        # replay-backend "ticks" are server steps: rid → step at submit,
+        # so ttft_ticks is populated on fused/split too (paged parity)
+        self._steps = 0
+        self._submit_step: dict = {}
 
     def submit(self, req: GenerationRequest) -> int:
         rid = self._track(req, self._next_rid)
         self._next_rid += 1
         self._queued.append(req)
+        self._submit_step[rid] = self._steps
+        if self.telemetry is not None:
+            self.telemetry.request_submitted(rid)
         return rid
 
     @property
@@ -212,7 +227,7 @@ class _ReplayBackend(_RequestBook):
         return bool(self._queued or self._streams or self._pending_events)
 
     def _release_dicts(self) -> tuple:
-        return (self._split_stats,)
+        return (self._split_stats, self._submit_step)
 
     def abort(self, rid: int) -> bool:
         """Cancel: a queued request never computes; a streaming one is cut
@@ -235,21 +250,29 @@ class _ReplayBackend(_RequestBook):
 
     def _finalize(self, rid: int, gen, reason: str) -> None:
         m = self._metrics[rid]
-        m.latency_s = time.time() - m.submit_s
+        m.latency_s = time.perf_counter() - m.submit_s
         self._outputs[rid] = RequestOutput(
             rid, self._reqs[rid].prompt, np.asarray(gen, np.int32),
             finished=True, finish_reason=reason, metrics=m,
             split_stats=self._split_stats.get(rid))
+        if self.telemetry is not None:
+            self.telemetry.request_finished(rid, "requests", reason,
+                                            len(self._outputs[rid].tokens))
 
     def _emit_round(self) -> list:
         events, self._pending_events = self._pending_events, []
-        now = time.time()
+        self._steps += 1
+        now = time.perf_counter()
         for rid in list(self._streams):
             toks, cur, reason, lps = self._streams[rid]
             if cur < len(toks):
                 m = self._metrics[rid]
                 if m.ttft_s is None:
                     m.ttft_s = now - m.submit_s
+                    m.ttft_ticks = self._steps - self._submit_step[rid]
+                    if self.telemetry is not None:
+                        self.telemetry.first_token(
+                            rid, "requests", ttft_ticks=m.ttft_ticks)
                 lp = None if lps is None else float(lps[cur])
                 events.append(TokenEvent(rid, cur, int(toks[cur]),
                                          logprob=lp))
@@ -273,9 +296,10 @@ class FusedBackend(_ReplayBackend):
     Per-request ``max_tokens`` and stop sets truncate the replay."""
 
     def __init__(self, cfg, params, opts: RuntimeOpts = RuntimeOpts(),
-                 *, cache_len: int = 4096):
-        super().__init__()
-        self.engine = Engine(cfg, params, opts, cache_len=cache_len)
+                 *, cache_len: int = 4096, telemetry=None):
+        super().__init__(telemetry=telemetry)
+        self.engine = Engine(cfg, params, opts, cache_len=cache_len,
+                             telemetry=telemetry)
 
     def step(self) -> list:
         if self._queued:
@@ -310,13 +334,14 @@ class SplitBackend(_ReplayBackend):
     finishes with reason ``"deadline"``."""
 
     def __init__(self, cfg, params, opts: RuntimeOpts = RuntimeOpts(),
-                 *, opsc=None, compress: bool = True, **split_kwargs):
+                 *, opsc=None, compress: bool = True, telemetry=None,
+                 **split_kwargs):
         if opsc is None:
             raise ValueError("the split backend needs opsc=OPSCConfig(...)")
-        super().__init__()
+        super().__init__(telemetry=telemetry)
         self.compress = compress
         self.engine = SplitEngine(cfg, params, opsc, opts=opts,
-                                  **split_kwargs)
+                                  telemetry=telemetry, **split_kwargs)
 
     def step(self) -> list:
         if self._queued and not self._streams:
@@ -346,9 +371,11 @@ class PagedBackend(_RequestBook):
     results/finish_reasons."""
 
     def __init__(self, cfg, params, opts: RuntimeOpts = RuntimeOpts(),
-                 **scheduler_kwargs):
+                 *, telemetry=None, **scheduler_kwargs):
         super().__init__()
-        self.scheduler = Scheduler(cfg, params, opts, **scheduler_kwargs)
+        self.telemetry = telemetry
+        self.scheduler = Scheduler(cfg, params, opts, telemetry=telemetry,
+                                   **scheduler_kwargs)
 
     def submit(self, req: GenerationRequest) -> int:
         return self._track(req, self.scheduler.submit(
@@ -366,7 +393,7 @@ class PagedBackend(_RequestBook):
         self._pending_events = []
         if sched.pending:
             sched.step()
-        events += self._collect(time.time())
+        events += self._collect(time.perf_counter())
         if not sched.pending:  # drained — same reclamation as run()
             sched.release_prefixes()
         return events
@@ -374,7 +401,7 @@ class PagedBackend(_RequestBook):
     def abort(self, rid: int) -> bool:
         ok = self.scheduler.abort(rid)
         if ok:  # surface the partial result now, its events next step
-            self._pending_events += self._collect(time.time())
+            self._pending_events += self._collect(time.perf_counter())
         return ok
 
     def _collect(self, now: float) -> list:
@@ -391,7 +418,14 @@ class PagedBackend(_RequestBook):
                              np.int32)
             m = self._metrics[rid]
             m.latency_s = now - m.submit_s
-            m.ttft_ticks = sched.stats.ttft_ticks.get(rid)
+            # tracer-sourced when tracing (the first-token span records the
+            # tick), scheduler stats otherwise — identical values, but the
+            # tracer copy survives a stats reset
+            if sched.telemetry is not None:
+                m.ttft_ticks = sched.telemetry.ttft_ticks.get(
+                    rid, sched.stats.ttft_ticks.get(rid))
+            else:
+                m.ttft_ticks = sched.stats.ttft_ticks.get(rid)
             self._outputs[rid] = RequestOutput(
                 rid, req.prompt, gen, finished=True, finish_reason=reason,
                 metrics=m)
@@ -410,17 +444,38 @@ class LLMServer:
     (extra keyword arguments reach that backend's constructor — e.g.
     ``num_pages=``/``max_slots=``/``lazy_growth=`` for paged, ``opsc=``
     and channel/deadline knobs for split, ``cache_len=`` for fused) or an
-    already-built :class:`ServingBackend`."""
+    already-built :class:`ServingBackend`.
+
+    ``telemetry`` threads one :class:`~repro.serving.telemetry.Tracer`
+    through the chosen backend (``True`` builds a fresh one, exposed as
+    ``server.tracer``): request-lifecycle spans, per-tick timelines, and
+    the :meth:`metrics` SLO summaries all record into it; export a
+    Perfetto-loadable trace with ``server.tracer.export_chrome_trace``.
+    The default ``None`` keeps every instrumented path a strict no-op."""
 
     def __init__(self, cfg=None, params=None,
                  opts: RuntimeOpts = RuntimeOpts(), *,
-                 backend="paged", **backend_kwargs):
+                 backend="paged", telemetry=None, **backend_kwargs):
+        if telemetry is True:
+            from repro.serving.telemetry import Tracer
+
+            telemetry = Tracer()
+        self.tracer = telemetry
         if isinstance(backend, str):
             if backend not in _BACKENDS:
                 raise ValueError(f"backend must be one of "
                                  f"{sorted(_BACKENDS)}, got {backend!r}")
-            backend = _BACKENDS[backend](cfg, params, opts, **backend_kwargs)
+            backend = _BACKENDS[backend](cfg, params, opts,
+                                         telemetry=telemetry,
+                                         **backend_kwargs)
+        elif telemetry is not None and getattr(
+                backend, "telemetry", None) is None:
+            raise ValueError(
+                "pass telemetry= to the backend's constructor when handing "
+                "LLMServer an already-built backend")
         self.backend: ServingBackend = backend
+        if self.tracer is None:  # adopt a prebuilt backend's tracer
+            self.tracer = getattr(backend, "telemetry", None)
 
     def submit(self, prompt,
                sampling: SamplingParams = SamplingParams()) -> int:
@@ -468,3 +523,40 @@ class LLMServer:
         consuming a :class:`RequestOutput` so a long-lived server's memory
         tracks LIVE requests, not total requests ever served."""
         return self.backend.release(rid)
+
+    def metrics(self) -> dict:
+        """One flat ``{name: number}`` metrics dict — the serving layer's
+        SLO surface, superseding ad-hoc :class:`RequestMetrics` plumbing.
+
+        Always present (telemetry on or off): ``requests.*`` aggregates
+        built from the finished outputs still retained — finished count,
+        per-reason counts, and streaming-percentile summaries of
+        ``requests.ttft_s`` / ``requests.latency_s`` (``.p50``/``.p95``/
+        ``.p99``/``.mean``/...). With a tracer attached, the tracer's
+        full registry (tick latencies, pool gauges, TTFT/TPOT/e2e
+        histograms, compile counters, split uplink accounting) is merged
+        in under its own names."""
+        from repro.serving.telemetry import Histogram
+
+        out: dict = {}
+        if self.tracer is not None:
+            out.update(self.tracer.metrics_dict())
+        finished = self.backend.outputs()
+        out["requests.retained"] = len(finished)
+        ttft, lat = Histogram(), Histogram()
+        ticks = Histogram()
+        for o in finished.values():
+            out[f"requests.reason.{o.finish_reason}"] = out.get(
+                f"requests.reason.{o.finish_reason}", 0) + 1
+            if o.metrics.ttft_s is not None:
+                ttft.record(o.metrics.ttft_s)
+            if o.metrics.latency_s is not None:
+                lat.record(o.metrics.latency_s)
+            if o.metrics.ttft_ticks is not None:
+                ticks.record(o.metrics.ttft_ticks)
+        for name, h in (("requests.ttft_s", ttft),
+                        ("requests.latency_s", lat),
+                        ("requests.ttft_ticks", ticks)):
+            for k, v in h.summary().items():
+                out[f"{name}.{k}"] = v
+        return out

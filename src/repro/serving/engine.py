@@ -73,12 +73,30 @@ def _fused_generate(params, cfg, opts, cache_len, max_new, tokens, patches,
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, opts: RuntimeOpts = RuntimeOpts(),
-                 cache_len: int = 4096):
+                 cache_len: int = 4096, telemetry=None):
         self.cfg = cfg
         self.params = params
         self.opts = opts
         self.cache_len = cache_len
+        # telemetry.Tracer | None: with a tracer, each fused call lands one
+        # "fused_generate" span (device-synced timing) plus batch/token
+        # counters; None skips every tracer touch AND the sync
+        self.telemetry = telemetry
         self._gen_fns: dict = {}
+
+    def _span(self, t0: float, *, batch: int, prompt_len: int,
+              max_new: int, out) -> None:
+        """Close one fused-call span: sync so the span covers the real
+        device work (the values themselves are untouched)."""
+        tel = self.telemetry
+        jax.block_until_ready(out)
+        t1 = tel.now()
+        tel.add_span("fused_generate", t0, t1, track="engine", batch=batch,
+                     prompt_len=prompt_len, max_new=max_new)
+        tel.metrics.count("fused.calls")
+        tel.metrics.count("fused.requests", batch)
+        tel.metrics.count("fused.tokens", batch * max_new)
+        tel.metrics.observe("fused.batch_s", t1 - t0)
 
     def generate_fn(self, max_new_tokens: int, greedy: bool = True):
         """The fused loop: jitted ``fn(params, tokens, patches, rng,
@@ -175,7 +193,10 @@ class Engine:
         bucket = min(1 << (max_new - 1).bit_length(), self.cache_len - s)
         fn = self.request_fn(bucket, greedy=all(p.greedy for p in sampling))
         keys, temp, tk, tp = device_operands(sampling)
+        t0 = self.telemetry.now() if self.telemetry is not None else 0.0
         out, lps = fn(self.params, tokens, None, keys, temp, tk, tp)
+        if self.telemetry is not None:
+            self._span(t0, batch=b, prompt_len=s, max_new=max_new, out=out)
         return GenerationResult(np.asarray(out[:, : s + max_new]), max_new,
                                 logprobs=np.asarray(lps[:, :max_new]))
 
@@ -195,10 +216,14 @@ class Engine:
         bucket = min(1 << (max_new_tokens - 1).bit_length(),
                      self.cache_len - s)
         fn = self.generate_fn(bucket, greedy=temperature <= 0)
+        t0 = self.telemetry.now() if self.telemetry is not None else 0.0
         out, lps = fn(self.params, tokens,
                       None if patches is None else jnp.asarray(patches),
                       jax.random.PRNGKey(seed),
                       jnp.float32(max(temperature, 1e-6)))
+        if self.telemetry is not None:
+            self._span(t0, batch=b, prompt_len=s, max_new=max_new_tokens,
+                       out=out)
         return GenerationResult(np.asarray(out[:, : s + max_new_tokens]),
                                 max_new_tokens,
                                 logprobs=np.asarray(lps[:, :max_new_tokens]))

@@ -188,6 +188,9 @@ class PagedKVPool:
         self.block_tables = np.zeros((max_requests, self.max_blocks), np.int32)
         self.lengths = np.zeros((max_requests,), np.int64)
         self.active = np.zeros((max_requests,), bool)
+        # host BYTES held by live export_slot snapshots (the scheduler's
+        # swap-resume preemption): export adds, restore/discard subtracts
+        self.swap_bytes = 0
 
     # ------------------------------------------------------------ allocator
 
@@ -504,7 +507,21 @@ class PagedKVPool:
             tuple(np.asarray(leaf[:, idx])
                   for leaf in (c.k, c.v, c.k_scale, c.v_scale, c.pos))
             for c in self._caches)
-        return {"length": n, "data": data}
+        snapshot = {"length": n, "data": data}
+        self.swap_bytes += self.snapshot_bytes(snapshot)
+        return snapshot
+
+    @staticmethod
+    def snapshot_bytes(snapshot: dict) -> int:
+        """Host BYTES one :meth:`export_slot` snapshot holds."""
+        return sum(a.nbytes for leaves in snapshot["data"] for a in leaves)
+
+    def discard_snapshot(self, snapshot: dict) -> None:
+        """Drop an :meth:`export_slot` snapshot that will never be
+        restored (the preempted request was aborted) — releases its
+        ``swap_bytes`` accounting."""
+        self.swap_bytes -= self.snapshot_bytes(snapshot)
+        assert self.swap_bytes >= 0, "snapshot discarded twice"
 
     def restore_slot(self, snapshot: dict,
                      reserve_tokens: int | None = None) -> int:
@@ -531,6 +548,10 @@ class PagedKVPool:
                 pos=c.pos.at[:, idx].set(jnp.asarray(pos))))
         self._caches = tuple(new)
         self.lengths[slot] = n
+        # the snapshot is consumed: its host bytes are no longer held
+        # (the admit above already succeeded — nothing leaks on failure)
+        self.swap_bytes -= self.snapshot_bytes(snapshot)
+        assert self.swap_bytes >= 0, "snapshot restored twice"
         return slot
 
     # ------------------------------------------------------- device plumbing
@@ -627,3 +648,15 @@ class PagedKVPool:
         """Fraction of allocatable pages currently in use (shared pages
         counted once)."""
         return self.pages_in_use / max(1, self.num_pages - 1)
+
+    def gauges(self) -> dict:
+        """One consistent occupancy sample — what the telemetry tracer
+        records per scheduler tick: pages in use / shared / free (page
+        counts), host swap bytes, occupancy fraction, and the physical
+        page bytes resident on device."""
+        return {"pages_in_use": self.pages_in_use,
+                "pages_shared": self.pages_shared,
+                "pages_free": self.free_pages,
+                "swap_bytes": self.swap_bytes,
+                "occupancy": self.occupancy(),
+                "page_bytes_in_use": self.page_bytes_in_use()}

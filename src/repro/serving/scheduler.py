@@ -231,6 +231,9 @@ class SchedulerStats:
     packed_tokens: int = 0  # live tokens those calls carried
     packed_pad_tokens: int = 0  # tail-pad rows they carried (pad fraction
     #                             = packed_pad_tokens / (packed_ticks * T))
+    prefill_tokens: int = 0  # prompt/resume TOKENS written by prefill calls
+    #                          (all tick modes — the prefill side of the
+    #                          tick timeline's token accounting)
     # rid → ticks from submit to the first sampled token (TTFT in ticks)
     ttft_ticks: dict = dataclasses.field(default_factory=dict)
     # chunk size → ticks it was picked (adaptive prefill_chunk="auto")
@@ -289,7 +292,7 @@ class Scheduler:
                  prefill_mode: str = "chunked",
                  prefill_chunk: int | str | tuple = 256,
                  preempt_cooldown: int = 1, tick_mode: str | None = None,
-                 token_budget: int | None = None):
+                 token_budget: int | None = None, telemetry=None):
         if resume not in ("swap", "refill"):
             raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
         if prefill_mode not in ("chunked", "wave"):
@@ -328,9 +331,12 @@ class Scheduler:
         # every decoding slot needs a row, plus >= 1 for prefill progress
         self.token_budget = max(int(token_budget), max_slots + 1)
         self.preempt_cooldown = preempt_cooldown
+        # telemetry.Tracer | None — every instrumentation site below is
+        # guarded on it, so the disabled path never calls the tracer (and
+        # never forces a device sync): telemetry=None is a strict no-op
+        self.telemetry = telemetry
         self._tick = 0
         self._shapes: set = set()  # distinct jitted call shapes dispatched
-        self._swap_bytes = 0
         self.queue: deque = deque()
         self.slots: list = [None] * max_slots
         self.results: dict = {}
@@ -473,6 +479,8 @@ class Scheduler:
                             f"the registered {entry.tokens.size}-token one")
                 req.prefix_key = prefix_key
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.request_submitted(rid)
         return rid
 
     def release_prefixes(self) -> None:
@@ -503,9 +511,7 @@ class Scheduler:
             if req.rid != rid:
                 continue
             if req.snapshot is not None:
-                self._swap_bytes -= sum(a.nbytes
-                                        for leaves in req.snapshot["data"]
-                                        for a in leaves)
+                self.pool.discard_snapshot(req.snapshot)
                 req.snapshot = None
             self.queue.remove(req)
             self._finish_abort(req, req.generated)
@@ -516,11 +522,12 @@ class Scheduler:
             self.pool.free(i)
             self.slots[i] = None
             self._reset_ops(i)
-            self._finish_abort(st.req, st.generated)
+            self._finish_abort(st.req, st.generated, track=f"slot{i}")
             return True
         return False
 
-    def _finish_abort(self, req: Request, generated: list) -> None:
+    def _finish_abort(self, req: Request, generated: list,
+                      track: str = "queue") -> None:
         # an aborted prefix CREATOR must not strand waiting forks: clear
         # the claim so the next same-key admission materializes the prefix
         entry = self._prefixes.get(req.prefix_key) \
@@ -532,6 +539,9 @@ class Scheduler:
         self.finish_reasons[req.rid] = "abort"
         self._finished.append(req.rid)
         self.stats.aborted += 1
+        if self.telemetry is not None:
+            self.telemetry.request_finished(req.rid, track, "abort",
+                                            len(generated))
 
     def drain_events(self) -> list:
         """Return and clear the per-token events emitted since the last
@@ -596,8 +606,11 @@ class Scheduler:
         """Track every distinct jitted call shape the scheduler dispatches —
         ``stats.compiled_shapes`` is the compile-count the chunked mode
         exists to bound."""
+        new = shape not in self._shapes
         self._shapes.add(shape)
         self.stats.compiled_shapes = len(self._shapes)
+        if self.telemetry is not None:
+            self.telemetry.shape_dispatch(new)
 
     def _admission_target(self, req: Request) -> int:
         """TOKENS the admission must cover. Reserve mode: the request's
@@ -643,12 +656,19 @@ class Scheduler:
             target = self._admission_target(req)
             if not self.pool.can_admit(target, prefix=handle):
                 break
+            tel = self.telemetry
+            # swap resume carries a snapshot; refill resume carries only
+            # its already-generated tokens — both re-admissions
+            resumed = req.snapshot is not None or bool(req.generated)
             if req.snapshot is not None:
+                nbytes = self.pool.snapshot_bytes(req.snapshot)
+                t0 = tel.now() if tel is not None else 0.0
                 slot = self.pool.restore_slot(req.snapshot,
                                               reserve_tokens=target)
-                self._swap_bytes -= sum(
-                    a.nbytes for leaves in req.snapshot["data"]
-                    for a in leaves)
+                if tel is not None:
+                    tel.add_span("swap_resume", t0, tel.now(),
+                                 track=f"slot{slot}", rid=req.rid,
+                                 bytes=nbytes)
                 req.snapshot = None
                 restored.append(slot)
             else:
@@ -670,9 +690,11 @@ class Scheduler:
                                           prefilled=int(self.pool.lengths[slot]))
             self._set_ops(slot, req)
             self._admit_seq += 1
+            if tel is not None:
+                tel.request_admitted(req.rid, slot, resumed=resumed)
         return admitted, restored
 
-    def _record_first_token(self, st: _SlotState, token: int,
+    def _record_first_token(self, st: _SlotState, slot: int, token: int,
                             logprob: float) -> None:
         """Seed the slot's first sampled token (resumed requests keep their
         already-emitted tokens — the last one is the next decode input, not
@@ -682,6 +704,10 @@ class Scheduler:
             self._events.append((st.req.rid, 0, token, logprob))
             self.stats.ttft_ticks.setdefault(
                 st.req.rid, self._tick - st.req.submit_tick)
+            if self.telemetry is not None:
+                self.telemetry.first_token(
+                    st.req.rid, f"slot{slot}",
+                    ttft_ticks=self._tick - st.req.submit_tick)
 
     def _maybe_pin_prefix(self, st: _SlotState, slot: int) -> None:
         """Pin the shared prefix once its creator has WRITTEN the covered
@@ -716,19 +742,29 @@ class Scheduler:
         fn = self._prefill_shared if shared else self._prefill
         self._register_shape("prefill_shared" if shared else "prefill",
                              r, s_pad)
+        tel = self.telemetry
+        t0 = tel.now() if tel is not None else 0.0
         logits, new_caches = fn(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(rows=admitted),
             positions=jnp.asarray(posn))
+        if tel is not None:
+            jax.block_until_ready(logits)  # honest phase timing; values
+            t1 = tel.now()                 # are untouched (bit-identity)
         self.pool.update_from(new_caches)
         first, first_lp = self._sample_first(logits, admitted)
         for i, slot in enumerate(admitted):
             st = self.slots[slot]
             self.pool.commit_prefill(slot, int(toks[i].size))
             st.prefilled = int(toks[i].size)
-            self._record_first_token(st, int(first[i]), float(first_lp[i]))
+            if tel is not None:
+                tel.add_span("prefill", t0, t1, track=f"slot{slot}",
+                             rid=st.req.rid, tokens=lens[i], stage="wave")
+            self._record_first_token(st, slot, int(first[i]),
+                                     float(first_lp[i]))
             self._maybe_pin_prefix(st, slot)
         self.stats.prefills += 1
+        self.stats.prefill_tokens += sum(lens)
         self.stats.admitted += r
 
     def _sample_first(self, logits, rows: list | None) -> tuple:
@@ -819,10 +855,15 @@ class Scheduler:
                 posn[i, c - chunk.size:] = np.arange(lo, hi)
                 ends[i] = (hi, toks.size)
             self._register_shape(kind, self.max_slots, c)
+            tel = self.telemetry
+            t0 = tel.now() if tel is not None else 0.0
             logits, new_caches = fn(
                 self.params, jnp.asarray(tokens),
                 caches=self.pool.device_caches(),
                 positions=jnp.asarray(posn))
+            if tel is not None:
+                jax.block_until_ready(logits)
+                t1 = tel.now()
             self.pool.update_from(new_caches)
             # only dispatch the sampler on ticks where some row actually
             # completes its prompt — mid-prompt chunks discard the sample
@@ -833,11 +874,17 @@ class Scheduler:
                 st = self.slots[i]
                 hi, total = ends[i]
                 self.pool.commit_prefill(i, hi)
+                chunk_tokens = hi - st.prefilled
                 st.prefilled = hi
                 self.stats.prefill_chunks += 1
+                self.stats.prefill_tokens += chunk_tokens
+                if tel is not None:
+                    tel.add_span("prefill", t0, t1, track=f"slot{i}",
+                                 rid=st.req.rid, tokens=chunk_tokens,
+                                 stage=kind, done=hi == total)
                 self._maybe_pin_prefix(st, i)
                 if hi == total:  # prompt complete → first token
-                    self._record_first_token(st, int(first[i]),
+                    self._record_first_token(st, i, int(first[i]),
                                              float(first_lp[i]))
             self.stats.prefills += 1
         return True
@@ -880,6 +927,12 @@ class Scheduler:
         # anti-thrash: the victim re-queues but is not re-admitted before
         # its cooldown elapses while other slots run (see _admit_wave)
         st.req.cooldown_until = self._tick + 1 + self.preempt_cooldown
+        tel = self.telemetry
+        if tel is not None:
+            tel.span_end(("decode", st.req.rid), outcome="preempt")
+            tel.event("preempt", track=f"slot{victim}", rid=st.req.rid,
+                      reason="pool_exhausted", resume=self.resume)
+            tel.metrics.count("scheduler.preemptions")
         if self.resume == "swap":
             # snapshot only positions actually WRITTEN: the victim may have
             # run its speculative append this very tick (its pending token
@@ -891,17 +944,21 @@ class Scheduler:
                 written = len(st.req.prompt) + len(st.generated) - 1
             else:
                 written = st.prefilled
+            t0 = tel.now() if tel is not None else 0.0
             st.req.snapshot = self.pool.export_slot(victim, n_tokens=written)
-            self._swap_bytes += sum(a.nbytes
-                                    for leaves in st.req.snapshot["data"]
-                                    for a in leaves)
+            if tel is not None:
+                tel.add_span("swap_out", t0, tel.now(),
+                             track=f"slot{victim}", rid=st.req.rid,
+                             bytes=self.pool.snapshot_bytes(st.req.snapshot))
             self.stats.peak_swap_bytes = max(self.stats.peak_swap_bytes,
-                                             self._swap_bytes)
+                                             self.pool.swap_bytes)
         self.pool.free(victim)
         self.slots[victim] = None
         self._reset_ops(victim)
         self.queue.appendleft(st.req)
         self.stats.preemptions += 1
+        if tel is not None:
+            tel.request_requeued(st.req.rid, reason="preempt")
         return True
 
     def _grow_decode_slots(self) -> None:
@@ -948,6 +1005,10 @@ class Scheduler:
             pos[i] = int(self.pool.lengths[i]) - 1  # position being written
             t[i] = len(self.slots[i].generated)
         keys, temp, tk, tp = self._device_ops()
+        tel = self.telemetry
+        if tel is not None:
+            for i in active:
+                tel.decode_begin(self.slots[i].req.rid, f"slot{i}")
         nxt, lps, new_caches = self._decode(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(), pos=jnp.asarray(pos),
@@ -1014,11 +1075,19 @@ class Scheduler:
             return False
         self._register_shape("packed", self.max_slots, t_budget)
         keys, temp, tk, tp = self._device_ops()
+        tel = self.telemetry
+        if tel is not None:
+            for i in decode_rows:
+                tel.decode_begin(self.slots[i].req.rid, f"slot{i}")
+            t0 = tel.now()
         nxt, lps, new_caches = self._packed(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(), positions=jnp.asarray(posn),
             slots=jnp.asarray(slot_ids), logit_rows=jnp.asarray(logit_rows),
             keys=keys, t=jnp.asarray(t_idx), temp=temp, tk=tk, tp=tp)
+        if tel is not None:
+            jax.block_until_ready(nxt)
+            t1 = tel.now()
         self.pool.update_from(new_caches)
         nxt, lps = np.asarray(nxt), np.asarray(lps)
         for i, (lo, hi, total) in pieces.items():
@@ -1026,9 +1095,14 @@ class Scheduler:
             self.pool.commit_prefill(i, hi)
             st.prefilled = hi
             self.stats.prefill_chunks += 1
+            self.stats.prefill_tokens += hi - lo
+            if tel is not None:
+                tel.add_span("prefill", t0, t1, track=f"slot{i}",
+                             rid=st.req.rid, tokens=hi - lo, stage="packed",
+                             done=hi == total)
             self._maybe_pin_prefix(st, i)
             if hi == total:  # prompt complete → first token
-                self._record_first_token(st, int(nxt[i]), float(lps[i]))
+                self._record_first_token(st, i, int(nxt[i]), float(lps[i]))
         for i in decode_rows:
             st = self.slots[i]
             st.generated.append(int(nxt[i]))
@@ -1058,6 +1132,9 @@ class Scheduler:
             self.slots[i] = None
             self._reset_ops(i)
             self.stats.evicted += 1
+            if self.telemetry is not None:
+                self.telemetry.request_finished(st.req.rid, f"slot{i}",
+                                                reason, len(toks))
 
     def _track_occupancy(self) -> None:
         self.stats.peak_occupancy = max(self.stats.peak_occupancy,
@@ -1096,7 +1173,43 @@ class Scheduler:
         then evict. Chunked/wave modes: admit, advance prefill (one
         fixed-size chunk per mid-prefill slot, or the full wave), evict
         anything that finished on its prefill token, decode the ragged
-        batch, evict. Returns whether work remains."""
+        batch, evict. Returns whether work remains.
+
+        With ``telemetry=`` set, each tick additionally lands one
+        :class:`~repro.serving.telemetry.TickRecord` (wall time, token/pad
+        counts, compile events, pool occupancy, queue depth); the
+        timeline is assembled from stat deltas, so the instrumented tick
+        runs the exact same scheduling decisions as the bare one."""
+        tel = self.telemetry
+        if tel is None:
+            return self._step_inner()
+        s = self.stats
+        pre = (s.packed_tokens, s.packed_pad_tokens, s.prefill_tokens,
+               s.slot_ticks)
+        tel.tick_begin(self._tick + 1, self.tick_mode)
+        try:
+            pending = self._step_inner()
+        finally:
+            if self.tick_mode == "packed":
+                tokens = s.packed_tokens - pre[0]
+                pad = s.packed_pad_tokens - pre[1]
+            else:
+                # legacy two-phase tick: prefill tokens + one decode token
+                # per stepped slot (no fixed buffer → no pad accounting)
+                tokens = (s.prefill_tokens - pre[2]) + (s.slot_ticks - pre[3])
+                pad = None
+            g = self.pool.gauges()
+            tel.tick_end(
+                tokens=tokens, pad_tokens=pad,
+                pages_in_use=g["pages_in_use"],
+                pages_shared=g["pages_shared"],
+                swap_bytes=g["swap_bytes"], queue_depth=len(self.queue),
+                active_slots=sum(st is not None for st in self.slots),
+                prefilling_slots=sum(st is not None and st.prefilling
+                                     for st in self.slots))
+        return pending
+
+    def _step_inner(self) -> bool:
         self._tick += 1
         admitted, restored = self._admit_wave()
         if restored:

@@ -89,7 +89,8 @@ class SplitEngine:
                  cache_len: int = 4096,
                  paged_cloud_kv: bool = False,
                  cloud_pool_pages: int = 256,
-                 cloud_page_size: int | None = None):
+                 cloud_page_size: int | None = None,
+                 telemetry=None):
         """The paper's split system (§2, Fig. 3): edge blocks [0, split)
         fake-quantized at ``opsc.qw_front``, cloud blocks [split, L) full
         precision, TS+TAB-Q payload across the split.
@@ -112,6 +113,11 @@ class SplitEngine:
             "split point must fall on a pattern boundary"
         self.cfg, self.opts, self.opsc = cfg, opts, opsc
         self.cache_len = cache_len
+        # telemetry.Tracer | None: per-segment edge/cloud spans, per-token
+        # uplink-bit and TAB-Q bit-width histograms, SplitStats mirrored
+        # into the shared registry. None skips every tracer touch and
+        # every device sync (the disabled path adds no host work)
+        self.telemetry = telemetry
         # I_kv=1 with a paged cloud: the per-step KV shipment and the cloud's
         # resident memory are accounted at PAGE granularity from a shared
         # pool (serving.kv_pool) instead of a dense per-request cache — the
@@ -200,13 +206,32 @@ class SplitEngine:
 
     # ------------------------------------------------------------ payload
 
+    def _tspan(self, segment: str, stage: str, t0: float, out) -> None:
+        """Close one edge/cloud segment span: sync so the span covers the
+        real device work (values untouched — tracing stays bit-identical)."""
+        tel = self.telemetry
+        jax.block_until_ready(out)
+        t1 = tel.now()
+        tel.add_span(segment, t0, t1, track=f"split:{segment}", stage=stage)
+        tel.metrics.observe(f"split.{segment}_s", t1 - t0)
+
     def _compress(self, h: jax.Array, fixed_bits=None):
         b, s, d = h.shape
         p = payload_encode(h.reshape(b * s, d).astype(jnp.float32),
                            tau=self.opsc.tau, delta=self.opsc.delta,
                            max_bits=self.opsc.max_act_bits, fixed_bits=fixed_bits)
         rec = payload_decode(p).reshape(b, s, d).astype(h.dtype)
-        return rec, float(p.payload_bits())
+        bits = float(p.payload_bits())
+        tel = self.telemetry
+        if tel is not None:
+            # per-token TAB-Q chosen bit widths (sign bit included) and the
+            # mean uplink bits each token of this payload cost — the wire
+            # histograms the placement optimizer consumes
+            for w in np.asarray(p.below.bits).reshape(-1).tolist():
+                tel.metrics.observe("split.tabq_bits", float(w))
+            tel.metrics.observe("split.uplink_bits_per_token",
+                                bits / max(1, b * s))
+        return rec, bits
 
     def _eq3_bits(self, w: int, i_kv: int) -> float:
         c = self.cfg
@@ -329,9 +354,13 @@ class SplitEngine:
                                               cloud_pool.page_bytes_in_use())
 
         # ---- prefill both segments (prompt flows through the same uplink)
+        tel = self.telemetry
+        t0 = tel.now() if tel is not None else 0.0
         h, edge_caches = self._edge_front(self.edge_params["blocks"],
                                           self.edge_params, tokens, edge_caches,
                                           jnp.int32(0), decode=False)
+        if tel is not None:
+            self._tspan("edge", "prefill", t0, h)
         if aligned:
             # the shared prefix crosses the uplink ONCE (with row 0); rows
             # 1+ ship only their suffix columns and the cloud reconstructs
@@ -354,6 +383,10 @@ class SplitEngine:
         else:
             bits = float(h.size * 16)  # uncompressed fp16 uplink
         stats.uplink_bits_measured += bits
+        if tel is not None:
+            tel.event("uplink", track="split:uplink", bits=bits,
+                      stage="prefill", tokens=b * s)
+        t0 = tel.now() if tel is not None else 0.0
         if aligned:
             posn = np.tile(np.arange(s, dtype=np.int32), (b, 1))
             posn[1:, :aligned] = -1  # rows 1+ neither write nor re-read it
@@ -364,6 +397,8 @@ class SplitEngine:
             logits, cloud_caches = self._cloud_back(
                 self.cloud_params["blocks"], self.cloud_params, h,
                 cloud_caches, jnp.int32(0), decode=False)
+        if tel is not None:
+            self._tspan("cloud", "prefill", t0, logits)
         stats.uplink_bits_eq3 += self._eq3_bits(s, self.opsc.i_kv)
         if cloud_pool is not None:
             cloud_pool.update_from(cloud_caches)
@@ -397,9 +432,12 @@ class SplitEngine:
             n_out = step + 1
             if step + 1 == max_new_tokens:
                 break
+            t0 = tel.now() if tel is not None else 0.0
             h, edge_caches = self._edge_front(self.edge_params["blocks"],
                                               self.edge_params, nxt, edge_caches,
                                               jnp.int32(pos), decode=True)
+            if tel is not None:
+                self._tspan("edge", "decode", t0, h)
             fixed_bits = None
             if compress:
                 h_c, bits = self._compress(h, fixed_bits)
@@ -421,9 +459,13 @@ class SplitEngine:
                 stats.latency_s += lat
             stats.uplink_bits_measured += bits
             stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
+            if tel is not None:
+                tel.event("uplink", track="split:uplink", bits=bits,
+                          stage="decode", step=step, i_kv=i_kv)
 
             h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
             n_hist += 1
+            t0 = tel.now() if tel is not None else 0.0
             if i_kv:
                 if cloud_pool is not None:  # grow each request by one slot
                     for r in range(b):
@@ -445,9 +487,30 @@ class SplitEngine:
                 logits, _ = self._cloud_back(self.cloud_params["blocks"],
                                              self.cloud_params, hist, fresh,
                                              jnp.int32(0), decode=False)
+            if tel is not None:
+                self._tspan("cloud", "decode", t0, logits)
             pos += 1
             stats.tokens_generated += 1
 
+        if tel is not None:
+            # mirror the call's SplitStats into the shared registry — ONE
+            # uplink accounting surface across SplitStats, server.metrics()
+            # and exported traces
+            m = tel.metrics
+            m.count("split.calls")
+            m.count("split.requests", b)
+            m.count("split.tokens_generated", stats.tokens_generated)
+            m.count("split.uplink_bits_measured", stats.uplink_bits_measured)
+            m.count("split.uplink_bits_eq3", stats.uplink_bits_eq3)
+            m.count("split.uplink_bits_paged", stats.uplink_bits_paged)
+            m.count("split.early_exits", stats.early_exits)
+            m.count("split.kv_dropped_steps", stats.kv_dropped_steps)
+            m.count("split.deadline_latency_s", stats.latency_s)
+            if cloud_pool is not None:
+                m.gauge("split.cloud_pool_bytes_peak",
+                        stats.cloud_pool_bytes_peak)
+                m.gauge("split.shared_prefix_pages",
+                        stats.shared_prefix_pages)
         out = np.asarray(tok_buf[:, :n_out])
         toks = np.concatenate([np.asarray(tokens), out], axis=1)
         if with_logprobs:

@@ -399,6 +399,16 @@ def _check_pool_invariants(pool, handles):
     for slot in np.flatnonzero(pool.active):
         npages = int(np.count_nonzero(pool.block_tables[slot]))
         assert npages >= pool.pages_for(max(1, int(pool.lengths[slot])))
+    # the per-tick telemetry gauges are views of the same counters — they
+    # must agree with the allocator state at every step of the walk
+    g = pool.gauges()
+    assert g["pages_in_use"] == pool.pages_in_use
+    assert g["pages_shared"] == int(np.count_nonzero(pool.refcount > 1))
+    assert g["pages_free"] == pool.free_pages
+    assert g["pages_in_use"] + g["pages_free"] == pool.num_pages - 1
+    assert g["swap_bytes"] >= 0
+    assert g["page_bytes_in_use"] == pool.page_bytes_in_use()
+    assert 0.0 <= g["occupancy"] <= 1.0
 
 
 def test_property_random_admit_fork_append_preempt_free_never_corrupts():

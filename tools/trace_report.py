@@ -1,0 +1,217 @@
+"""trace-report: render a text summary of an exported serving trace and
+validate its structure (the CI smoke gate for telemetry).
+
+  python tools/trace_report.py experiments/telemetry/trace.json \
+      [--require-spans N] [--require-ticks N] \
+      [--require-phases queued,prefill,decode,...]
+
+Reads a Chrome trace-event JSON produced by
+``repro.serving.telemetry.Tracer.export_chrome_trace`` and prints:
+
+  * per-phase span breakdown (count, total/mean duration) — the request
+    lifecycle time budget;
+  * instant-event counts (first_token / preempt / finish / compile /
+    uplink);
+  * tick timeline stats (count, modes, live vs. pad tokens, compile
+    events, peak pool occupancy, peak queue depth);
+  * the embedded ``repro_metrics`` SLO table (TTFT / TPOT / tick-latency
+    p50/p95/p99 and the preemption/swap counters).
+
+Validation (exit code 1 on failure): the trace must parse, carry at
+least ``--require-spans`` spans and ``--require-ticks`` tick events,
+contain every phase named in ``--require-phases`` (span names and
+instant-event names both count), and every span must have monotonically
+consistent timestamps (``ts >= 0``, ``dur >= 0``, and each request's
+lifecycle events in submit → first-token → finish order).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _spans(trace: dict) -> list:
+    return [e for e in trace.get("traceEvents", [])
+            if e.get("ph") == "X" and e.get("cat") == "span"]
+
+
+def _instants(trace: dict) -> list:
+    return [e for e in trace.get("traceEvents", [])
+            if e.get("ph") == "i"]
+
+
+def _ticks(trace: dict) -> list:
+    return [e for e in trace.get("traceEvents", [])
+            if e.get("ph") == "X" and e.get("cat") == "tick"]
+
+
+def validate(trace: dict, require_phases=(), min_spans: int = 1,
+             min_ticks: int = 0) -> list:
+    """Structural checks; returns a list of human-readable problems
+    (empty = valid)."""
+    problems = []
+    spans, instants, ticks = _spans(trace), _instants(trace), _ticks(trace)
+    if len(spans) < min_spans:
+        problems.append(f"expected >= {min_spans} spans, found {len(spans)}")
+    if len(ticks) < min_ticks:
+        problems.append(f"expected >= {min_ticks} tick events, "
+                        f"found {len(ticks)}")
+    for e in spans + ticks:
+        if e.get("ts", -1) < 0:
+            problems.append(f"negative timestamp on {e.get('name')!r}")
+        if e.get("dur", -1) < 0:
+            problems.append(f"negative duration on {e.get('name')!r}")
+    seen = {e["name"] for e in spans} | {e["name"] for e in instants}
+    for phase in require_phases:
+        if phase not in seen:
+            problems.append(f"required phase {phase!r} missing "
+                            f"(have: {sorted(seen)})")
+    # per-request lifecycle ordering: queued begins before first_token,
+    # first_token at or before finish (all in the same exported timebase)
+    starts: dict = {}
+    firsts: dict = {}
+    for e in spans:
+        rid = e.get("args", {}).get("rid")
+        if rid is not None and e["name"] == "queued":
+            starts[rid] = min(starts.get(rid, e["ts"]), e["ts"])
+    for e in instants:
+        rid = e.get("args", {}).get("rid")
+        if rid is None:
+            continue
+        if e["name"] == "first_token":
+            firsts[rid] = e["ts"]
+            if rid in starts and e["ts"] < starts[rid]:
+                problems.append(f"rid {rid}: first_token at {e['ts']} "
+                                f"before queued at {starts[rid]}")
+        if e["name"] == "finish" and rid in firsts \
+                and e["ts"] < firsts[rid]:
+            problems.append(f"rid {rid}: finish at {e['ts']} before "
+                            f"first_token at {firsts[rid]}")
+    if "repro_metrics" not in trace:
+        problems.append("missing embedded repro_metrics dict")
+    return problems
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.3f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.2f}ms"
+    return f"{us:.0f}us"
+
+
+def report(trace: dict, out=sys.stdout) -> None:
+    spans, instants, ticks = _spans(trace), _instants(trace), _ticks(trace)
+    w = out.write
+
+    w("== span phases ==\n")
+    by_phase: dict = defaultdict(list)
+    for e in spans:
+        by_phase[e["name"]].append(e["dur"])
+    for name in sorted(by_phase):
+        durs = by_phase[name]
+        w(f"  {name:<16} n={len(durs):<5} total={_fmt_us(sum(durs)):<10} "
+          f"mean={_fmt_us(sum(durs) / len(durs))}\n")
+    if not by_phase:
+        w("  (none)\n")
+
+    w("== instant events ==\n")
+    counts: dict = defaultdict(int)
+    for e in instants:
+        counts[e["name"]] += 1
+    for name in sorted(counts):
+        w(f"  {name:<16} n={counts[name]}\n")
+    if not counts:
+        w("  (none)\n")
+
+    w("== ticks ==\n")
+    if ticks:
+        modes: dict = defaultdict(int)
+        tokens = pad = compiles = 0
+        peak_pages = peak_queue = 0
+        for e in ticks:
+            a = e.get("args", {})
+            modes[a.get("mode", "?")] += 1
+            tokens += a.get("tokens", 0) or 0
+            pad += a.get("pad_tokens", 0) or 0
+            compiles += a.get("new_compiles", 0) or 0
+            peak_pages = max(peak_pages, a.get("pages_in_use", 0) or 0)
+            peak_queue = max(peak_queue, a.get("queue_depth", 0) or 0)
+        durs = [e["dur"] for e in ticks]
+        w(f"  count={len(ticks)} modes={dict(modes)}\n")
+        w(f"  tokens={tokens} pad_tokens={pad} new_compiles={compiles}\n")
+        w(f"  peak_pages_in_use={peak_pages} peak_queue_depth="
+          f"{peak_queue}\n")
+        w(f"  wall total={_fmt_us(sum(durs))} mean="
+          f"{_fmt_us(sum(durs) / len(durs))}\n")
+    else:
+        w("  (none)\n")
+
+    m = trace.get("repro_metrics", {})
+    w("== SLO table ==\n")
+    slo_rows = ("ttft_s", "tpot_s", "e2e_s", "tick.wall_s",
+                "fused.batch_s", "split.edge_s", "split.cloud_s")
+    any_row = False
+    for row in slo_rows:
+        if f"{row}.count" not in m:
+            continue
+        any_row = True
+        w(f"  {row:<14} n={m[f'{row}.count']:<6} "
+          f"p50={m.get(f'{row}.p50', 0):.6f} "
+          f"p95={m.get(f'{row}.p95', 0):.6f} "
+          f"p99={m.get(f'{row}.p99', 0):.6f}\n")
+    if not any_row:
+        w("  (no latency histograms recorded)\n")
+    w("== counters ==\n")
+    for key in sorted(m):
+        if isinstance(m[key], (int, float)) and "." not in key.rsplit(
+                ".", 1)[-1] and not any(
+                key.endswith(s) for s in
+                (".p50", ".p95", ".p99", ".mean", ".min", ".max", ".sum",
+                 ".count")):
+            w(f"  {key} = {m[key]}\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON from "
+                                  "Tracer.export_chrome_trace")
+    ap.add_argument("--require-spans", type=int, default=1,
+                    help="minimum span count (default 1)")
+    ap.add_argument("--require-ticks", type=int, default=0,
+                    help="minimum tick-event count (default 0)")
+    ap.add_argument("--require-phases", default="",
+                    help="comma-separated span/event names that must be "
+                         "present (e.g. queued,prefill,first_token,decode)")
+    args = ap.parse_args(argv)
+    try:
+        trace = load(args.trace)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"trace-report: cannot load {args.trace}: {e}",
+              file=sys.stderr)
+        return 1
+    report(trace)
+    phases = [p for p in args.require_phases.split(",") if p]
+    problems = validate(trace, require_phases=phases,
+                        min_spans=args.require_spans,
+                        min_ticks=args.require_ticks)
+    if problems:
+        print("trace-report: VALIDATION FAILED", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"trace-report: OK ({len(_spans(trace))} spans, "
+          f"{len(_ticks(trace))} ticks, {len(_instants(trace))} instants)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
