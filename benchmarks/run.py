@@ -23,6 +23,7 @@ def _registry():
     from benchmarks.ragged_batch import bench_ragged_batch
     from benchmarks.roofline_report import bench_roofline
     from benchmarks.sampling_api import bench_sampling_api
+    from benchmarks.speculative_split import bench_speculative_split
 
     return {
         "chunked_prefill": bench_chunked_prefill,
@@ -31,6 +32,7 @@ def _registry():
         "prefix_sharing": bench_prefix_sharing,
         "ragged_batch": bench_ragged_batch,
         "sampling_api": bench_sampling_api,
+        "speculative_split": bench_speculative_split,
         "fig5": pb.bench_fig5_server_scaling,
         "fig6": pb.bench_fig6_payload_size,
         "fig7": pb.bench_fig7_ts_ratio,

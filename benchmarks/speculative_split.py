@@ -1,0 +1,185 @@
+"""speculative_split benchmark: split-boundary speculative decoding — k
+round trips folded into one.
+
+The paper's split loop pays ONE edge→cloud uplink per generated token: the
+edge runs its OPSC front segment, ships one TAB-Q activation payload, and
+waits for the cloud's token. ``SplitEngine.generate(speculate_k=k)``
+amortizes that: the edge drafts k tokens from its own front segment (the
+early-exit head over the split-layer hidden state — zero extra weights),
+ships ONE k-token TAB-Q payload, and the cloud verifies every position in
+a single packed call; rejected positions roll back. Greedy output is
+BIT-IDENTICAL to the per-token loop (asserted here) — speculation changes
+only the round-trip count, never the tokens.
+
+Measured on the trained induction vehicle (the copy task — a workload a
+draft head can actually predict) per (cloud, k) variant: acceptance rate,
+tokens/s, decode-phase uplink round trips, mean accepted tokens per round,
+and uplink bits per generated token (measured TS+TAB-Q payload bits). The
+same amortization is measured on the serving side: the continuous-batching
+``Scheduler(speculate_k=)`` with model-free prompt-lookup drafting, where
+the win is fewer decode ticks for the same bit-exact stream. CPU wall
+numbers are call-path comparisons (kernels in interpret mode), not TPU
+performance; the trips/acceptance/identity columns are exact on any
+backend. JSON artifact under ``experiments/speculative_split/``.
+
+  PYTHONPATH=src python -m benchmarks.speculative_split [--smoke]
+
+``--smoke`` runs one shrunken variant per section — the CI guard that the
+speculative path stays wired and bit-exact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "speculative_split")
+
+PAGE_SIZE = 4
+MAX_SLOTS = 3
+
+
+def _split_engine(cfg, params, paged: bool):
+    from repro.core.opsc import OPSCConfig
+    from repro.models.transformer import RuntimeOpts
+    from repro.serving.split_engine import SplitEngine
+
+    opsc = OPSCConfig(split_layer=2, qw_front=16, i_kv=1)
+    opts = RuntimeOpts(q_chunk=32, kv_chunk=32, remat=False,
+                       moe_capacity_factor=0.0)
+    kw = dict(paged_cloud_kv=True, cloud_pool_pages=128,
+              cloud_page_size=8) if paged else {}
+    return SplitEngine(cfg, params, opsc, opts=opts, cache_len=128, **kw)
+
+
+def _bench_split(cfg, params, prompts, max_new, ks, paged):
+    import numpy as np
+
+    name = "paged_cloud" if paged else "dense_cloud"
+    eng = _split_engine(cfg, params, paged)
+    ref, base = eng.generate(prompts, max_new, compress=True)
+    rows, rec = [], {}
+    for k in ks:
+        t0 = time.time()
+        out, st = eng.generate(prompts, max_new, compress=True,
+                               speculate_k=k)
+        wall = time.time() - t0
+        identical = bool(np.array_equal(out, ref))
+        assert identical, f"speculate_k={k} changed the greedy stream"
+        assert st.uplink_round_trips < base.uplink_round_trips, \
+            "speculation did not reduce decode round trips"
+        gen = st.tokens_generated
+        m = {
+            "speculate_k": k,
+            "identical_to_per_token": identical,
+            "acceptance_rate": round(st.acceptance_rate, 4),
+            "spec_rounds": st.spec_rounds,
+            "uplink_round_trips": st.uplink_round_trips,
+            "round_trips_per_token": round(
+                st.uplink_round_trips / max(gen, 1), 3),
+            "baseline_round_trips": base.uplink_round_trips,
+            "tokens_generated": gen,
+            "tokens_per_s": round(gen / wall, 2),
+            "uplink_bits_per_token": round(
+                st.uplink_bits_measured / max(gen, 1), 1),
+        }
+        rec[f"k{k}"] = m
+        rows.append((
+            f"speculative_split/{name}_k{k}", wall * 1e6,
+            f"acc={m['acceptance_rate']} trips={st.uplink_round_trips} "
+            f"vs {base.uplink_round_trips} bits/tok="
+            f"{m['uplink_bits_per_token']} identical={identical}"))
+    rec["baseline"] = {
+        "uplink_round_trips": base.uplink_round_trips,
+        "tokens_generated": base.tokens_generated,
+        "uplink_bits_per_token": round(
+            base.uplink_bits_measured / max(base.tokens_generated, 1), 1),
+    }
+    return rows, {name: rec}
+
+
+def _bench_scheduler(cfg, params, prompts, max_new, k, tick_mode):
+    import numpy as np
+
+    from repro.models.transformer import RuntimeOpts
+    from repro.serving.engine import Engine
+    from repro.serving.scheduler import Scheduler
+
+    opts = RuntimeOpts(q_chunk=16, kv_chunk=32, remat=False,
+                       quantized_kv=True, moe_capacity_factor=0.0)
+    eng = Engine(cfg, params, opts, cache_len=128)
+    want = [eng.generate(p[None], max_new).tokens[0] for p in prompts]
+
+    def serve(kk):
+        sched = Scheduler(cfg, params, opts, num_pages=96,
+                          page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+                          tick_mode=tick_mode, speculate_k=kk)
+        rids = [sched.submit(p, max_new) for p in prompts]
+        t0 = time.time()
+        res = sched.run()
+        return [res[r] for r in rids], sched.stats, time.time() - t0
+
+    _, st0, _ = serve(0)
+    outs, st, wall = serve(k)
+    identical = all(np.array_equal(o, w) for o, w in zip(outs, want))
+    assert identical, "scheduler speculation diverged from Engine greedy"
+    assert st.steps < st0.steps, "speculation did not reduce decode ticks"
+    gen = len(prompts) * max_new
+    m = {
+        "tick_mode": tick_mode, "speculate_k": k,
+        "identical_to_engine": identical,
+        "acceptance_rate": round(st.acceptance_rate, 4),
+        "spec_rounds": st.spec_rounds,
+        "decode_steps": st.steps, "baseline_decode_steps": st0.steps,
+        "tokens_per_s": round(gen / wall, 2),
+    }
+    row = (f"speculative_split/scheduler_{tick_mode}_k{k}", wall * 1e6,
+           f"acc={m['acceptance_rate']} steps={st.steps} vs {st0.steps} "
+           f"identical={identical}")
+    return [row], {f"scheduler_{tick_mode}": m}
+
+
+def bench_speculative_split(smoke: bool = False):
+    from benchmarks.common import HALF, copy_prompts, induction_vehicle
+
+    cfg, params = induction_vehicle()
+    n = 2 if smoke else 8
+    prompts = copy_prompts(n)[:, : HALF + 1]
+    max_new = 6 if smoke else HALF
+    ks = (2,) if smoke else (2, 4)
+
+    rows, rec = [], {"config": {"arch": cfg.name, "prompts": n,
+                                "max_new": max_new, "smoke": smoke}}
+    for paged in ((True,) if smoke else (False, True)):
+        r, m = _bench_split(cfg, params, prompts, max_new, ks, paged)
+        rows += r
+        rec.update(m)
+    for mode in (("chunked",) if smoke else ("packed", "chunked")):
+        r, m = _bench_scheduler(cfg, params, list(prompts), max_new,
+                                ks[-1], mode)
+        rows += r
+        rec.update(m)
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "speculative_split_smoke.json" if smoke
+                       else "speculative_split.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one shrunken variant per section (CI guard for "
+                         "the speculative split/scheduler paths)")
+    args = ap.parse_args()
+    for name, us, derived in bench_speculative_split(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -60,7 +60,10 @@ class SamplingParams:
     ``Scheduler.submit``. ``latency_hint`` feeds the scheduler's adaptive
     prefill chunking (``prefill_chunk="auto"``): ``"interactive"`` pulls
     chunk sizes down while this request decodes (tail latency),
-    ``"batch"`` tolerates big chunks (throughput)."""
+    ``"batch"`` tolerates big chunks (throughput). ``speculate_k`` asks
+    the backend to draft up to k tokens per step and verify them in one
+    batched model call (:func:`speculative_verify`); 0 disables. Backends
+    without a draft source (the fused scan) ignore it."""
 
     max_tokens: int = 16
     temperature: float = 0.0
@@ -73,12 +76,16 @@ class SamplingParams:
     prefix_key: object = None
     prefix_len: int | None = None
     latency_hint: str = "balanced"
+    speculate_k: int = 0
 
     def __post_init__(self):
         if self.max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0 (0 disables), got {self.top_k}")
+        if self.speculate_k < 0:
+            raise ValueError(f"speculate_k must be >= 0 (0 disables), "
+                             f"got {self.speculate_k}")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.latency_hint not in _LATENCY_HINTS:
@@ -157,6 +164,38 @@ def truncate_at_stop(tokens, params: SamplingParams) -> tuple:
     return toks, "length"
 
 
+def filtered_logits(logits, temperature, top_k, top_p):
+    """Temperature-scale ``logits`` (R, V) and mask everything outside the
+    intersection of the per-row top-k and nucleus sets to ``NEG_INF`` (ties
+    at either cutoff are kept — at least the argmax token always survives).
+    This IS the non-greedy sampling distribution: ``categorical`` over the
+    returned array renormalizes implicitly. Factored out of
+    :func:`sample_tokens` so :func:`speculative_verify` accepts/rejects
+    drafts against the EXACT distribution the non-speculative path samples
+    from — any drift here would break the rejection-sampling equivalence.
+    Returns (R, V) f32."""
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+    z = logits / safe_t[:, None]
+    sz = jnp.flip(jnp.sort(z, axis=-1), axis=-1)  # per-row descending
+    # top-k cutoff: k-th largest scaled logit (k=0 disables → keep all)
+    k = jnp.where(top_k <= 0, v, jnp.minimum(top_k, v)).astype(jnp.int32)
+    kth = jnp.take_along_axis(sz, (k - 1)[:, None], axis=-1)[:, 0]
+    # nucleus cutoff: in sorted order keep rows whose EXCLUSIVE
+    # cumulative probability is < top_p (the smallest set whose mass
+    # reaches top_p; the top-1 token is always kept)
+    probs = jax.nn.softmax(sz, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1) - probs
+    keep = cum < top_p[:, None]
+    keep = keep.at[:, 0].set(True)
+    n_keep = jnp.sum(keep, axis=-1).astype(jnp.int32)
+    pth = jnp.take_along_axis(sz, (n_keep - 1)[:, None], axis=-1)[:, 0]
+
+    cutoff = jnp.maximum(kth, pth)
+    return jnp.where(z >= cutoff[:, None], z, NEG_INF)
+
+
 def sample_tokens(logits, keys, t, temperature, top_k, top_p):
     """Sample one token per row, all rows in one compiled shape.
 
@@ -168,36 +207,17 @@ def sample_tokens(logits, keys, t, temperature, top_k, top_p):
 
     Rows with ``temperature <= 0`` or ``top_k == 1`` return the exact
     ``argmax`` (greedy lane). The rest are filtered to the intersection of
-    the top-k and nucleus sets (ties at either cutoff are kept — at least
-    the argmax token always survives) and sampled from the renormalized
-    distribution at their temperature. When EVERY row is greedy — the
-    default workload — a ``lax.cond`` skips the sort/softmax/categorical
-    arithmetic at runtime entirely (same compiled shape, argmax-only
-    cost). Returns (R,) int32."""
+    the top-k and nucleus sets (:func:`filtered_logits`) and sampled from
+    the renormalized distribution at their temperature. When EVERY row is
+    greedy — the default workload — a ``lax.cond`` skips the
+    sort/softmax/categorical arithmetic at runtime entirely (same compiled
+    shape, argmax-only cost). Returns (R,) int32."""
     logits = logits.astype(jnp.float32)
-    r, v = logits.shape
     greedy_tok = jnp.argmax(logits, axis=-1)
     use_greedy = (temperature <= 0.0) | (top_k == 1)
 
     def non_greedy(_):
-        safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
-        z = logits / safe_t[:, None]
-        sz = jnp.flip(jnp.sort(z, axis=-1), axis=-1)  # per-row descending
-        # top-k cutoff: k-th largest scaled logit (k=0 disables → keep all)
-        k = jnp.where(top_k <= 0, v, jnp.minimum(top_k, v)).astype(jnp.int32)
-        kth = jnp.take_along_axis(sz, (k - 1)[:, None], axis=-1)[:, 0]
-        # nucleus cutoff: in sorted order keep rows whose EXCLUSIVE
-        # cumulative probability is < top_p (the smallest set whose mass
-        # reaches top_p; the top-1 token is always kept)
-        probs = jax.nn.softmax(sz, axis=-1)
-        cum = jnp.cumsum(probs, axis=-1) - probs
-        keep = cum < top_p[:, None]
-        keep = keep.at[:, 0].set(True)
-        n_keep = jnp.sum(keep, axis=-1).astype(jnp.int32)
-        pth = jnp.take_along_axis(sz, (n_keep - 1)[:, None], axis=-1)[:, 0]
-
-        cutoff = jnp.maximum(kth, pth)
-        masked = jnp.where(z >= cutoff[:, None], z, NEG_INF)
+        masked = filtered_logits(logits, temperature, top_k, top_p)
         step_keys = jax.vmap(jax.random.fold_in)(
             jnp.asarray(keys, jnp.uint32), jnp.maximum(jnp.asarray(t), 0))
         return jax.vmap(jax.random.categorical)(step_keys, masked)
@@ -226,3 +246,123 @@ def sample_tokens_with_logprobs(logits, keys, t, temperature, top_k, top_p):
     separately. Returns ((R,) int32 tokens, (R,) f32 logprobs)."""
     toks = sample_tokens(logits, keys, t, temperature, top_k, top_p)
     return toks, token_logprobs(logits, toks)
+
+
+# PRNG stream tags for the speculative accept / residual draws. The token
+# draw at generation index t uses fold_in(key, t) (sample_tokens); the
+# accept and residual draws fold a second, distinct constant on top so the
+# three streams never collide — re-using the token stream for acceptance
+# would correlate "was the draft accepted" with "which token would have
+# been drawn", silently biasing the output distribution.
+_ACCEPT_TAG = 0x5EC0_0001
+_RESIDUAL_TAG = 0x5EC0_0002
+
+
+def speculative_verify(draft, draft_len, logits, keys, t0,
+                       temperature, top_k, top_p):
+    """Draft-verify acceptance for speculative decoding, all rows in one
+    compiled shape — the sampler half of the split-boundary speculation
+    loop (``SplitEngine.generate(speculate_k=)`` and the paged scheduler's
+    verify ticks).
+
+    ``draft`` (R, K) int32 — each row's proposed tokens (garbage beyond
+    ``draft_len``); ``draft_len`` (R,) int32 in [0, K]; ``logits``
+    (R, K+1, V) — the VERIFY model's logits, where ``logits[:, j]`` is the
+    target distribution for generation index ``t0 + j`` given the prefix
+    plus drafts < j (one multi-token model call produces all K+1 rows);
+    ``keys``/``temperature``/``top_k``/``top_p`` as in
+    :func:`sample_tokens`; ``t0`` (R,) int32 — the generation index of the
+    first token emitted by this round.
+
+    GREEDY rows (``temperature <= 0`` or ``top_k == 1``) take exact-match
+    acceptance: draft position j is accepted iff it equals
+    ``argmax(logits[:, j])``, and every emitted token IS that argmax — so
+    the emitted stream is bit-identical to non-speculative greedy decoding
+    regardless of what the drafter proposed (a bad draft only costs
+    acceptance length, never correctness).
+
+    NON-GREEDY rows take standard rejection sampling against the point-mass
+    draft proposal: position j accepts draft d with probability p_j(d)
+    under the filtered+tempered target (:func:`filtered_logits` — the
+    EXACT distribution :func:`sample_tokens` draws from); the first
+    rejected position samples the residual p_j(y)/(1 - p_j(d)) over y ≠ d;
+    and when ALL drafts are accepted the bonus token at position
+    ``draft_len`` is drawn with ``fold_in(key, t0 + draft_len)`` — the
+    very bits :func:`sample_tokens` would use at that generation index, so
+    a round with ``draft_len == 0`` degenerates bit-identically to the
+    non-speculative draw. Either way each emitted token is marginally
+    distributed as the target sampler (the rejection-sampling identity;
+    pinned statistically by ``tests/test_speculative_sampling.py``).
+
+    Returns ``(out (R, K+1) int32, n_out (R,) int32, logprobs (R, K+1)
+    f32)``: row r emits ``out[r, :n_out[r]]`` (1 <= n_out <= draft_len+1 —
+    the accepted prefix, then the correction/bonus token); ``logprobs`` are
+    :func:`token_logprobs` under the raw VERIFY logits (never the draft
+    model's), valid wherever ``out`` is."""
+    logits = logits.astype(jnp.float32)
+    r, k1, v = logits.shape
+    kd = k1 - 1
+    draft = jnp.asarray(draft, jnp.int32)
+    draft_len = jnp.asarray(draft_len, jnp.int32)
+    keys = jnp.asarray(keys, jnp.uint32)
+    t0 = jnp.maximum(jnp.asarray(t0, jnp.int32), 0)
+
+    tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (R, K+1)
+    jpos = jnp.arange(kd, dtype=jnp.int32)
+    in_draft = jpos[None, :] < draft_len[:, None]  # (R, K)
+    use_greedy = (temperature <= 0.0) | (top_k == 1)
+
+    def leading(accept):
+        """Length of the accepted prefix: #leading True in (R, K)."""
+        return jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1),
+                       axis=-1).astype(jnp.int32)
+
+    g_m = leading((draft == tgt[:, :kd]) & in_draft)
+
+    def non_greedy(_):
+        flat = filtered_logits(
+            logits.reshape(r * k1, v),
+            jnp.repeat(temperature, k1), jnp.repeat(top_k, k1),
+            jnp.repeat(top_p, k1))
+        masked = flat.reshape(r, k1, v)
+        # per-(row, position) keys: fold_in(key_r, t0_r + j) — the exact
+        # sample_tokens stream at each position's generation index
+        tj = t0[:, None] + jnp.arange(k1, dtype=jnp.int32)[None, :]
+        pos_keys = jax.vmap(
+            lambda key, ts: jax.vmap(lambda tt: jax.random.fold_in(key, tt))(ts)
+        )(keys, tj)  # (R, K+1, 2)
+        fresh = jax.vmap(jax.vmap(jax.random.categorical))(pos_keys, masked)
+
+        if kd == 0:
+            return fresh.astype(jnp.int32), jnp.ones((r,), jnp.int32)
+
+        tag = jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(0, None)),
+                       in_axes=(0, None))
+        # accept draft_j with probability p_j(draft_j) under the filtered
+        # sampling distribution (point-mass proposal: q_j = δ_draft)
+        probs = jax.nn.softmax(masked[:, :kd], axis=-1)
+        p_draft = jnp.take_along_axis(
+            probs, draft[..., None], axis=-1)[..., 0]  # (R, K)
+        u = jax.vmap(jax.vmap(lambda k: jax.random.uniform(k, ())))(
+            tag(pos_keys[:, :kd], _ACCEPT_TAG))
+        m = leading((u < p_draft) & in_draft)  # (R,)
+        # residual at the first rejection: p_j(y) / (1 - p_j(d)) over y ≠ d
+        # (categorical renormalizes the masked logits implicitly)
+        d_hot = jax.nn.one_hot(draft, v, dtype=jnp.bool_)
+        resid = jax.vmap(jax.vmap(jax.random.categorical))(
+            tag(pos_keys[:, :kd], _RESIDUAL_TAG),
+            jnp.where(d_hot, NEG_INF, masked[:, :kd]))
+
+        jj = jnp.arange(k1, dtype=jnp.int32)[None, :]
+        draft_pad = jnp.pad(draft, ((0, 0), (0, 1)))
+        resid_pad = jnp.pad(resid, ((0, 0), (0, 1)))
+        rejected = (jj == m[:, None]) & (m < draft_len)[:, None]
+        out = jnp.where(jj < m[:, None], draft_pad,
+                        jnp.where(rejected, resid_pad, fresh))
+        return out.astype(jnp.int32), (m + 1).astype(jnp.int32)
+
+    ng_out, ng_n = jax.lax.cond(
+        jnp.all(use_greedy), lambda _: (tgt, g_m + 1), non_greedy, None)
+    out = jnp.where(use_greedy[:, None], tgt, ng_out).astype(jnp.int32)
+    n_out = jnp.where(use_greedy, g_m + 1, ng_n).astype(jnp.int32)
+    return out, n_out, token_logprobs(logits, out)

@@ -480,3 +480,29 @@ def packed_step(params, cfg: ArchConfig, tokens, caches, positions, slots,
     xl = jnp.take(x[0], jnp.asarray(logit_rows, jnp.int32), axis=0)  # (R, D)
     logits = apply_head(cfg, params, xl[None])
     return logits[0], caches
+
+
+def paged_verify_step(params, cfg: ArchConfig, tokens, caches, positions,
+                      opts: RuntimeOpts = RuntimeOpts()):
+    """Multi-token verify THROUGH the paged pool — the (R, S) generalization
+    of :func:`paged_decode_step`: each row carries its last committed token
+    plus its draft burst and gets logits at EVERY in-call position back.
+
+    ``tokens``/``positions`` (R, S) RIGHT-ALIGNED (-1 pads route to the
+    trash page), with ``S = 1 + speculate_k``. The in-call tokens are
+    WRITTEN to the pool first and attention then reads every key —
+    history and the burst itself — back through the pool's quantized
+    codes, exactly like ``S`` single-token decode steps would
+    (quantization is per-token, so batching the writes leaves the codes
+    bit-identical; prefill-style fresh-f32 in-call keys would diverge
+    from the sequential path at quantization scale and flip argmaxes).
+    Returns (logits (R, S, V), caches): column j of row r is the target
+    distribution after consuming the row's in-call tokens <= j (left-pad
+    columns are garbage)."""
+    positions = jnp.asarray(positions, jnp.int32)
+    x = embed_inputs(cfg, params, tokens, None, jnp.maximum(positions, 0))
+    rope_cs = rope_tables(cfg, positions)
+    x, caches = _apply_blocks_cached(cfg, params["blocks"], x, caches,
+                                     rope_cs=rope_cs, q_positions=positions,
+                                     pos=jnp.int32(0), opts=opts, decode=True)
+    return apply_head(cfg, params, x), caches

@@ -331,7 +331,14 @@ class SplitBackend(_ReplayBackend):
     per ``step()``. The resulting :class:`RequestOutput` carries the
     call's ``SplitStats`` (measured/Eq. 3 uplink bits, paged-cloud
     residency, early exits). A generation the deadline ladder truncated
-    finishes with reason ``"deadline"``."""
+    finishes with reason ``"deadline"``.
+
+    ``SamplingParams(speculate_k=)`` turns the request's serving call
+    speculative: the edge drafts that many tokens per round and the cloud
+    verifies them in ONE uplink round trip
+    (``SplitEngine.generate(speculate_k=)``) — the carried ``SplitStats``
+    then report ``uplink_round_trips`` < tokens generated and the round's
+    ``acceptance_rate``."""
 
     def __init__(self, cfg, params, opts: RuntimeOpts = RuntimeOpts(),
                  *, opsc=None, compress: bool = True, telemetry=None,
@@ -349,7 +356,8 @@ class SplitBackend(_ReplayBackend):
             sp = req.sampling
             toks, stats, lps = self.engine.generate(
                 req.prompt[None], sp.max_tokens, compress=self.compress,
-                sampling=sp, with_logprobs=True)
+                sampling=sp, with_logprobs=True,
+                speculate_k=sp.speculate_k)
             gen = toks[0, req.prompt.shape[0]:]
             gen, reason = _apply_stop(gen, sp)
             if reason == "length" and gen.shape[0] < sp.max_tokens:
@@ -368,7 +376,15 @@ class PagedBackend(_RequestBook):
     events immediately. ``abort()`` cancels in place (pages reclaimed this
     call); the drained scheduler releases its pinned prefixes exactly like
     ``Scheduler.run``; ``release()`` also drops the scheduler's retained
-    results/finish_reasons."""
+    results/finish_reasons.
+
+    Construct with ``speculate_k=`` (a ``Scheduler`` keyword) to make
+    decode ticks speculative — each tick then verifies a prompt-lookup
+    draft burst per slot in one call, and a request's own
+    ``SamplingParams(speculate_k=)`` may lower its burst below the
+    scheduler-wide width. The fused backend has no incremental tick to
+    amortize, so it ignores ``speculate_k`` (documented on
+    ``SamplingParams``)."""
 
     def __init__(self, cfg, params, opts: RuntimeOpts = RuntimeOpts(),
                  *, telemetry=None, **scheduler_kwargs):

@@ -466,6 +466,48 @@ class PagedKVPool:
         self.reserve_write(slot, n_tokens)
         self.lengths[slot] = int(self.lengths[slot]) + n_tokens
 
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Roll ``slot`` back to ``new_len`` TOKENS — the speculative-decode
+        rejection primitive: a verify round appends the draft burst
+        optimistically, then truncates away the rejected tail.
+
+        Stored positions >= ``new_len`` are scrubbed to -1 on device in the
+        pages covering them, so the next step can never attend a rejected
+        token (the varlen/paged history masks drop pos -1, and the swap
+        exporter would otherwise snapshot the stale entries). The pages
+        themselves STAY allocated: they sit inside the slot's reservation
+        and the very next append rewrites the same page slots, so freeing
+        and re-allocating them would only churn the free list and re-raise
+        mid-tick ``PoolExhaustedError`` risk.
+
+        CoW safety: a page is only scrubbed if this slot owns it
+        EXCLUSIVELY. Shared pages hold immutable prefix tokens — drafts are
+        only ever written past the prefix into exclusively-owned (possibly
+        CoW-copied) pages — so a rollback reaching into a refcount > 1 page
+        is a caller bug and raises ``ValueError`` with no state change
+        (pinned by the property walk in ``tests/test_kv_pool.py``)."""
+        assert self.active[slot], f"slot {slot} is not active"
+        length = int(self.lengths[slot])
+        if not 0 < new_len <= length:
+            raise ValueError(f"truncate to {new_len} outside (0, {length}]")
+        if new_len == length:
+            return
+        first = new_len // self.page_size  # boundary page: may keep a head
+        pages = [int(p) for p in self.block_tables[slot][first:self.pages_for(length)]
+                 if p != TRASH_PAGE]
+        shared = [p for p in pages if self.refcount[p] > 1]
+        if shared:
+            raise ValueError(
+                f"truncate({slot}, {new_len}) would scrub shared page(s) "
+                f"{shared} (refcount > 1): CoW-shared prefixes are immutable")
+        if pages:
+            idx = jnp.asarray(pages, jnp.int32)
+            self._caches = tuple(
+                dataclasses.replace(c, pos=c.pos.at[:, idx].set(
+                    jnp.where(c.pos[:, idx] >= new_len, -1, c.pos[:, idx])))
+                for c in self._caches)
+        self.lengths[slot] = new_len
+
     def free(self, slot: int) -> None:
         """Return a finished request's page REFERENCES. Pages the slot owned
         exclusively are scrubbed on device (stored positions → -1) and

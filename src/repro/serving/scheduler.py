@@ -120,10 +120,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.sampling import (SamplingParams, sample_tokens_with_logprobs,
-                                 truncate_at_stop)
+                                 speculative_verify, truncate_at_stop)
 from repro.models.transformer import (RuntimeOpts, packed_step,
                                       paged_decode_step, paged_prefill,
-                                      paged_prefill_shared)
+                                      paged_prefill_shared, paged_verify_step)
 from repro.serving.kv_pool import (DEFAULT_PAGE_SIZE, PagedKVPool,
                                    PoolExhaustedError, SharedPrefix)
 
@@ -227,6 +227,11 @@ class SchedulerStats:
     compiled_shapes: int = 0  # distinct jitted step shapes seen (packed
     #                           mode is exactly 1; chunked stays O(1); wave
     #                           grows per bucket)
+    spec_rounds: int = 0  # verify rounds that carried >= 1 draft token
+    spec_drafted: int = 0  # draft tokens proposed across those rounds
+    spec_accepted: int = 0  # draft tokens EMITTED (accepted and not cut by
+    #                         a stop token) — acceptance rate is
+    #                         spec_accepted / spec_drafted
     packed_ticks: int = 0  # token-packed calls dispatched (packed mode)
     packed_tokens: int = 0  # live tokens those calls carried
     packed_pad_tokens: int = 0  # tail-pad rows they carried (pad fraction
@@ -239,11 +244,50 @@ class SchedulerStats:
     # chunk size → ticks it was picked (adaptive prefill_chunk="auto")
     auto_chunks: dict = dataclasses.field(default_factory=dict)
 
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens that were emitted."""
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
+
 
 def _bucket(n: int) -> int:
     """Next power of two — bounds the distinct (R_adm, S_pad) prefill
     compiles the same way Engine buckets its scan length."""
     return 1 << max(0, (n - 1).bit_length())
+
+
+def _prompt_lookup_draft(context: np.ndarray, k: int,
+                         max_ngram: int = 3) -> np.ndarray:
+    """Model-free draft proposal by PROMPT LOOKUP: find the most recent
+    earlier occurrence of the context's trailing n-gram (longest of
+    ``max_ngram`` .. 1 that matches) and propose the up-to-``k`` tokens
+    that followed it.
+
+    This is the scheduler's draft source — no second model, no extra
+    weights, pure host-side token matching — and it is SAFE BY
+    CONSTRUCTION: the verify step accepts a draft position only when the
+    target model (greedy: argmax match; sampled: rejection test) agrees,
+    so a bad guess costs acceptance length, never correctness. Repetitive
+    continuations (code, structured text, tiny-vocab test models) accept
+    long runs; incompressible ones degenerate to one verified token per
+    round, exactly the non-speculative tick. Returns (<= k,) int32,
+    possibly empty."""
+    context = np.asarray(context, np.int32).reshape(-1)
+    length = context.size
+    if k <= 0 or length < 2:
+        return np.zeros((0,), np.int32)
+    for n in range(min(max_ngram, length - 1), 0, -1):
+        pat = context[length - n:]
+        # windows over context[:-1]: every start whose match leaves >= 1
+        # follower token; the trailing n-gram itself can never match
+        windows = np.lib.stride_tricks.sliding_window_view(
+            context[:length - 1], n)
+        hits = np.flatnonzero((windows == pat).all(axis=1))
+        if hits.size:
+            start = int(hits[-1])  # most recent occurrence wins
+            return context[start + n:start + n + k].copy()
+    return np.zeros((0,), np.int32)
 
 
 class Scheduler:
@@ -282,7 +326,26 @@ class Scheduler:
     decoding slot plus at least one prefill token, so it is clamped to
     ``>= max_slots + 1``; the default ``prefill_chunk + max_slots`` gives
     prefill the same per-tick bandwidth as one chunked-mode chunk even at
-    full decode occupancy."""
+    full decode occupancy.
+
+    ``speculate_k=k`` (k > 0) turns every decode tick SPECULATIVE: each
+    decoding slot proposes up to k draft tokens by prompt lookup
+    (:func:`_prompt_lookup_draft` — model-free n-gram matching over its
+    own prompt + generation), the pool optimistically appends the burst,
+    ONE fixed ``(max_slots, 1 + k)`` ``paged_verify_step`` call scores
+    every position through the pool's quantized codes (in packed mode
+    the packed buffer then carries prefill only — in-segment fresh-f32
+    draft keys would drift from the sequential path at quantization
+    scale), and
+    ``core.sampling.speculative_verify`` accepts per slot — rejected
+    positions roll back via ``kv_pool.truncate``. Greedy requests emit a
+    stream BIT-IDENTICAL to ``speculate_k=0`` (acceptance is argmax
+    match, emission is the argmax itself); sampled requests emit the
+    exact target distribution (rejection sampling). ``k`` is the
+    compiled verify width and the per-request cap —
+    ``SamplingParams(speculate_k=)`` may lower it per request, and 0
+    (the default) disables speculation entirely, leaving every code path
+    byte-identical to the non-speculative scheduler."""
 
     def __init__(self, cfg: ArchConfig, params,
                  opts: RuntimeOpts = RuntimeOpts(),
@@ -292,7 +355,8 @@ class Scheduler:
                  prefill_mode: str = "chunked",
                  prefill_chunk: int | str | tuple = 256,
                  preempt_cooldown: int = 1, tick_mode: str | None = None,
-                 token_budget: int | None = None, telemetry=None):
+                 token_budget: int | None = None, speculate_k: int = 0,
+                 telemetry=None):
         if resume not in ("swap", "refill"):
             raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
         if prefill_mode not in ("chunked", "wave"):
@@ -314,6 +378,8 @@ class Scheduler:
         if not ladder or min(ladder) < 1:
             raise ValueError(
                 f"prefill_chunk sizes must be >= 1, got {prefill_chunk!r}")
+        if speculate_k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got {speculate_k}")
         self.cfg, self.params, self.opts = cfg, params, opts
         self.pool = PagedKVPool(cfg, num_pages=num_pages, page_size=page_size,
                                 max_requests=max_slots, max_seq_len=max_seq_len)
@@ -326,6 +392,7 @@ class Scheduler:
         reach = self.pool.max_blocks * page_size
         self._chunk_ladder = tuple(sorted({min(c, reach) for c in ladder}))
         self.prefill_chunk = self._chunk_ladder[-1]
+        self.speculate_k = int(speculate_k)
         if token_budget is None:
             token_budget = self.prefill_chunk + max_slots
         # every decoding slot needs a row, plus >= 1 for prefill progress
@@ -402,6 +469,21 @@ class Scheduler:
                 logits, keys[rows], t, temp[rows], tk[rows], tp[rows])
 
         self._sample_rows = jax.jit(sample_rows)
+
+        def verify_sample(params, tokens, caches, positions, gather, draft,
+                          draft_len, keys, t0, temp, tk, tp):
+            # speculative tick (every tick mode): one multi-token verify
+            # through the pool, logits realigned from the right-aligned call layout
+            # to generation-index order, then draft acceptance — all ONE
+            # jitted function; only accepted tokens cross to the host
+            logits, new_caches = paged_verify_step(params, cfg, tokens,
+                                                   caches, positions, opts)
+            logits = jnp.take_along_axis(logits, gather[:, :, None], axis=1)
+            out, n, lps = speculative_verify(draft, draft_len, logits,
+                                             keys, t0, temp, tk, tp)
+            return out, n, lps, new_caches
+
+        self._verify = jax.jit(verify_sample)
 
     # -------------------------------------------------------------- intake
 
@@ -961,20 +1043,52 @@ class Scheduler:
             tel.request_requeued(st.req.rid, reason="preempt")
         return True
 
-    def _grow_decode_slots(self) -> None:
-        """Reserve one pool token for every slot about to decode this tick.
-        In lazy mode, page-boundary growth that exhausts the pool preempts
-        before the step runs (the victim's un-decoded tick is simply not
-        taken — its resume re-prefills from exactly the tokens it had
-        emitted)."""
+    def _draft_plan(self) -> dict:
+        """Propose this tick's draft burst per decoding slot: ``{slot:
+        drafts (kd,) int32}`` with ``kd <= speculate_k``, empty when
+        speculation is off. Each slot's cap is the scheduler-wide
+        ``speculate_k`` (the compiled verify width), optionally lowered by
+        the request's own ``SamplingParams.speculate_k``, and always
+        bounded by the tokens it may still emit (``kd + 1`` emit at most —
+        the bound that keeps the reserve-mode admission reservation
+        unbreachable). Drafts come from :func:`_prompt_lookup_draft` over
+        prompt + generated."""
+        k = self.speculate_k
+        if k == 0:
+            return {}
+        plan = {}
+        for i, st in enumerate(self.slots):
+            if st is None or st.prefilling:
+                continue
+            sp = st.req.sampling
+            cap = min(k, sp.speculate_k) if sp.speculate_k > 0 else k
+            kd = min(cap, st.req.max_new_tokens - len(st.generated) - 1)
+            plan[i] = _prompt_lookup_draft(
+                np.concatenate([st.req.prompt,
+                                np.asarray(st.generated, np.int32)]), kd)
+        return plan
+
+    def _grow_decode_slots(self, plan: dict | None = None) -> None:
+        """Reserve pool tokens for every slot about to decode this tick —
+        one per slot, plus its planned draft burst when speculating.
+        In lazy mode, page-boundary growth that exhausts the pool sheds
+        the slot's OWN drafts first (a draft burst is optional work; a
+        request is not), then preempts before the step runs (the victim's
+        un-decoded tick is simply not taken — its resume re-prefills from
+        exactly the tokens it had emitted)."""
         for i in range(self.max_slots):
             if self.slots[i] is None or self.slots[i].prefilling:
                 continue
+            want = 1 + (plan[i].size if plan and i in plan else 0)
             while True:
                 try:
-                    self.pool.append(i, 1)
+                    self.pool.append(i, want)
                     break
                 except PoolExhaustedError:
+                    if want > 1:
+                        plan[i] = plan[i][:0]
+                        want = 1
+                        continue
                     if not self._preempt_one(requester=i):
                         raise PoolExhaustedError(
                             f"request {self.slots[i].req.rid} cannot grow: "
@@ -983,15 +1097,108 @@ class Scheduler:
                     if self.slots[i] is None:
                         break  # we were the victim; skip our own step
 
+    def _emit_burst(self, slot: int, toks, n: int, lps, kd: int) -> None:
+        """Land one verify round's accepted tokens on slot ``slot``:
+        ``toks[:n]`` emit IN INDEX ORDER, each event carrying the token's
+        logprob under the true verify distribution (never the drafter's).
+        The burst is cut at its first stop token — the sequential decode
+        would have finished there, so later accepted tokens must not leak
+        out — and the slot's pool length rolls back to its fed-token count
+        whenever part of the appended burst went unemitted
+        (``kv_pool.truncate``: rejected/cut positions are scrubbed so no
+        later step, export or history walk can see them)."""
+        st = self.slots[slot]
+        stop = st.req.sampling.stop_set
+        emit = 0
+        for j in range(n):
+            tok = int(toks[j])
+            st.generated.append(tok)
+            self._events.append((st.req.rid, len(st.generated) - 1, tok,
+                                 float(lps[j])))
+            emit += 1
+            if tok in stop:
+                break
+        if kd:
+            self.stats.spec_rounds += 1
+            self.stats.spec_drafted += kd
+            self.stats.spec_accepted += emit - 1
+            if self.telemetry is not None:
+                self.telemetry.metrics.observe(
+                    "scheduler.accepted_tokens", float(emit))
+        if emit < 1 + kd:
+            self.pool.truncate(slot, int(self.pool.lengths[slot])
+                               - (1 + kd) + emit)
+
+    def _verify_tick(self, active: list, plan: dict) -> None:
+        """The speculative decode tick (every tick mode): each decoding
+        slot's last token plus its draft burst ride one fixed
+        ``(max_slots, 1 + speculate_k)`` right-aligned call through the
+        pool (``models.transformer.paged_verify_step`` — all keys read
+        back quantized, bit-identical attention inputs to the sequential
+        decode steps), and the fused
+        ``core.sampling.speculative_verify`` accepts per slot — k drafts
+        verified for one dispatch instead of k ticks. Greedy slots emit
+        the exact argmax stream (bit-identical to the non-speculative
+        tick); sampled slots emit the exact target distribution by
+        rejection sampling. Inactive rows ride fully padded as ever."""
+        k = self.speculate_k
+        s = 1 + k
+        self._register_shape("verify", self.max_slots, s)
+        tokens = np.zeros((self.max_slots, s), np.int32)
+        posn = np.full((self.max_slots, s), -1, np.int32)
+        gather = np.zeros((self.max_slots, s), np.int32)
+        draft = np.zeros((self.max_slots, k), np.int32)
+        dlen = np.zeros((self.max_slots,), np.int32)
+        t0 = np.zeros((self.max_slots,), np.int32)
+        for i in active:
+            st = self.slots[i]
+            d = plan[i]
+            kd = d.size
+            # first position being written: the grow appended 1 + kd
+            base = int(self.pool.lengths[i]) - 1 - kd
+            tokens[i, s - 1 - kd:] = np.concatenate(
+                [[st.generated[-1]], d]).astype(np.int32)
+            posn[i, s - 1 - kd:] = np.arange(base, base + 1 + kd)
+            # verify column j (generation index t0 + j) lives at call
+            # column s - 1 - kd + j; clamp past the draft count (those
+            # gathers are garbage the sampler masks by draft_len)
+            gather[i] = s - 1 - kd + np.minimum(np.arange(s), kd)
+            draft[i, :kd] = d
+            dlen[i] = kd
+            t0[i] = len(st.generated)
+        keys, temp, tk, tp = self._device_ops()
+        tel = self.telemetry
+        if tel is not None:
+            for i in active:
+                tel.decode_begin(self.slots[i].req.rid, f"slot{i}")
+        out, n_acc, lps, new_caches = self._verify(
+            self.params, jnp.asarray(tokens),
+            caches=self.pool.device_caches(), positions=jnp.asarray(posn),
+            gather=jnp.asarray(gather), draft=jnp.asarray(draft),
+            draft_len=jnp.asarray(dlen), keys=keys, t0=jnp.asarray(t0),
+            temp=temp, tk=tk, tp=tp)
+        self.pool.update_from(new_caches)
+        out, n_acc, lps = np.asarray(out), np.asarray(n_acc), np.asarray(lps)
+        for i in active:
+            self._emit_burst(i, out[i], int(n_acc[i]), lps[i], plan[i].size)
+        self.stats.steps += 1
+        self.stats.slot_ticks += len(active)
+
     def _decode_tick(self) -> None:
         """One ragged decode step over EVERY slot (single compiled shape);
         inactive rows — free slots AND slots still mid-prefill — carry
         position -1 and are masked end-to-end, so prefill chunks and decode
-        share the tick without sharing a shape."""
-        self._grow_decode_slots()
+        share the tick without sharing a shape. With ``speculate_k`` set
+        the tick dispatches as one multi-token verify instead
+        (:meth:`_verify_tick`)."""
+        plan = self._draft_plan()
+        self._grow_decode_slots(plan)
         active = [i for i, st in enumerate(self.slots)
                   if st is not None and not st.prefilling]
         if not active:
+            return
+        if self.speculate_k:
+            self._verify_tick(active, plan)
             return
         self._register_shape("decode", self.max_slots, 1)
         tokens = np.zeros((self.max_slots, 1), np.int32)
@@ -1033,17 +1240,26 @@ class Scheduler:
         page-walk attention, gathers each slot's LAST row into ``(R, V)``
         logits and samples through the per-slot operand lanes — prefill
         chunks and decode tokens share one dispatch AND one compiled shape.
-        Returns whether any work was dispatched."""
-        self._grow_decode_slots()
-        decode_rows = [i for i, st in enumerate(self.slots)
-                       if st is not None and not st.prefilling]
+        With ``speculate_k`` set, decoding slots are EXCLUDED from the
+        buffer: a draft burst must be verified through the pool's
+        quantized codes (:meth:`_verify_tick`, dispatched right after by
+        the packed step), not as fresh in-segment f32 keys, or the verify
+        logits drift from the sequential decode path at quantization
+        scale. Returns whether any work was dispatched."""
+        k = self.speculate_k
+        if not k:
+            self._grow_decode_slots()
+        decode_rows = [] if k else [
+            i for i, st in enumerate(self.slots)
+            if st is not None and not st.prefilling]
         t_budget = self.token_budget
         tokens = np.zeros((1, t_budget), np.int32)
         posn = np.full((1, t_budget), -1, np.int32)
         slot_ids = np.full((1, t_budget), -1, np.int32)
         logit_rows = np.zeros((self.max_slots,), np.int32)
         t_idx = np.zeros((self.max_slots,), np.int32)
-        budget = t_budget - len(decode_rows)  # decode rows are never cut
+        # decode rows are never cut
+        budget = t_budget - len(decode_rows)
         cap = self._pick_chunk() if any(
             st is not None and st.prefilling for st in self.slots) else 0
         cur = 0
@@ -1053,6 +1269,8 @@ class Scheduler:
             if st is None:
                 continue
             if not st.prefilling:
+                if k:
+                    continue  # speculating: decodes ride _verify_tick
                 tokens[0, cur] = st.generated[-1]
                 posn[0, cur] = int(self.pool.lengths[i]) - 1
                 slot_ids[0, cur] = i
@@ -1193,6 +1411,11 @@ class Scheduler:
             if self.tick_mode == "packed":
                 tokens = s.packed_tokens - pre[0]
                 pad = s.packed_pad_tokens - pre[1]
+                if self.speculate_k:
+                    # the multi-token verify dispatch rides OUTSIDE the
+                    # packed buffer (decode slots are excluded from it);
+                    # count its stepped slots like the two-phase ticks do
+                    tokens += s.slot_ticks - pre[3]
             else:
                 # legacy two-phase tick: prefill tokens + one decode token
                 # per stepped slot (no fixed buffer → no pad accounting)
@@ -1220,8 +1443,19 @@ class Scheduler:
             if did or restored:
                 self._track_occupancy()
                 self._evict_finished()
-            elif (not admitted and not restored and self.queue
-                  and all(st is None for st in self.slots)):
+            if self.speculate_k:
+                # speculating: the packed call carried prefill only; the
+                # decode slots now ride the pool-only multi-token verify
+                # (max_new == 1 slots already finished on their prefill
+                # token and were evicted above)
+                if any(st is not None and not st.prefilling
+                       for st in self.slots):
+                    self._decode_tick()
+                    self._track_occupancy()
+                    self._evict_finished()
+                    return self.pending
+            if not did and (not admitted and not restored and self.queue
+                            and all(st is None for st in self.slots)):
                 self._fail_stuck_queue()
             return self.pending
         did_prefill = False

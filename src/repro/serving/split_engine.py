@@ -28,7 +28,8 @@ from repro.configs.base import ArchConfig
 from repro.core.channel import ChannelConfig, LatencyModel, optimal_rate
 from repro.core.opsc import OPSCConfig, kv_cache_bytes
 from repro.core.sampling import (broadcast_params, device_operands,
-                                 sample_tokens, token_logprobs)
+                                 sample_tokens, speculative_verify,
+                                 token_logprobs)
 from repro.core.payload import decode as payload_decode
 from repro.core.payload import encode as payload_encode
 from repro.models import layers as L
@@ -78,6 +79,22 @@ class SplitStats:
     uplink_bits_paged: float = 0.0
     cloud_pool_bytes_peak: int = 0
     shared_prefix_pages: int = 0  # pool pages pinned by the shared prefix
+    # speculative decoding (generate(speculate_k=)): per-call draft/verify
+    # accounting. uplink_round_trips counts DECODE-phase uplink payloads
+    # (prefill excluded) in BOTH modes, so the round-trip amortization is
+    # directly readable: the per-token loop pays one trip per generated
+    # token; speculation pays one per verify round and emits
+    # ~(1 + acceptance length) tokens with it.
+    uplink_round_trips: int = 0
+    spec_rounds: int = 0
+    spec_drafted: int = 0  # draft tokens proposed (per row, summed)
+    spec_accepted: int = 0  # draft tokens accepted by the verifier
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the cloud verifier accepted."""
+        return self.spec_accepted / self.spec_drafted if self.spec_drafted \
+            else 0.0
 
 
 class SplitEngine:
@@ -142,6 +159,18 @@ class SplitEngine:
         self._edge_front = jax.jit(self._edge_front_fn, static_argnames=("decode",))
         self._cloud_back = jax.jit(self._cloud_back_fn, static_argnames=("decode",))
         self._cloud_back_shared = jax.jit(self._cloud_back_shared_fn)
+        # speculative-verify stages: the edge's early-exit draft head (the
+        # OPSC front segment IS the draft model — apply_head over the
+        # split-layer hidden state, zero extra weights), the multi-token
+        # cloud verify (dense and paged variants), and the accept/reject
+        # sampler lanes
+        self._draft_next = jax.jit(
+            lambda head_params, h: jnp.argmax(
+                apply_head(self.cfg, head_params, h), axis=-1))
+        self._cloud_verify = jax.jit(self._cloud_verify_fn,
+                                     static_argnames=("decode", "tail"))
+        self._cloud_verify_paged = jax.jit(self._cloud_verify_paged_fn)
+        self._spec_verify = jax.jit(speculative_verify)
         # device-side helpers for the generation loop: greedy head, the
         # per-request sampler (serving-API path; step index and every knob
         # traced — one trace total), and sequence-buffer writes
@@ -182,6 +211,46 @@ class SplitEngine:
                                          opts=opts, decode=decode)
         logits = apply_head(cfg, head_params, x[:, -1:])
         return logits[:, 0], caches
+
+    def _cloud_verify_fn(self, params_blocks, head_params, h, caches, pos,
+                         decode=False, tail=1):
+        """Multi-token cloud verify over DENSE caches: identical to
+        :meth:`_cloud_back_fn` but the head runs over the last ``tail``
+        positions — one decode=True call consumes the whole k-token draft
+        payload (the s>1 decode path attends the int8 cache positionally,
+        the same key set k sequential steps would read) and returns the
+        target distribution at EVERY draft position. ``tail`` also serves
+        the stateless I_kv=0 re-run, which feeds the full history and heads
+        only the verify columns. Returns (logits (B, tail, V), caches)."""
+        cfg, opts = self.cfg, self.opts
+        b, s = h.shape[:2]
+        positions = make_positions(cfg, b, s, offset=pos)
+        rope_cs = rope_tables(cfg, positions)
+        x, caches = _apply_blocks_cached(cfg, params_blocks, h, caches,
+                                         rope_cs=rope_cs, q_positions=positions,
+                                         pos=jnp.asarray(pos, jnp.int32),
+                                         opts=opts, decode=decode)
+        return apply_head(cfg, head_params, x[:, -tail:]), caches
+
+    def _cloud_verify_paged_fn(self, params_blocks, head_params, h, caches,
+                               positions):
+        """Multi-token cloud verify THROUGH the paged pool — the multi-token
+        generalization of the paged decode step: the k in-call keys are
+        written to the pool first and attention reads every key (history
+        AND the burst itself) back through the pool's quantized codes, so
+        the verify logits see bit-identical attention inputs to k
+        sequential decode steps (prefill-style fresh-f32 in-call keys
+        would diverge at quantization scale). Head over ALL columns.
+        Returns (logits (B, k, V), caches)."""
+        cfg, opts = self.cfg, self.opts
+        positions = jnp.asarray(positions, jnp.int32)
+        rope_cs = rope_tables(cfg, positions)
+        x, caches = _apply_blocks_cached(cfg, params_blocks, h, caches,
+                                         rope_cs=rope_cs,
+                                         q_positions=positions,
+                                         pos=jnp.int32(0), opts=opts,
+                                         decode=True)
+        return apply_head(cfg, head_params, x), caches
 
     def _cloud_back_shared_fn(self, params_blocks, head_params, h, caches,
                               positions):
@@ -247,13 +316,32 @@ class SplitEngine:
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
                  compress: bool = True, shared_prefix_len: int = 0,
-                 sampling=None, with_logprobs: bool = False) -> tuple:
+                 sampling=None, with_logprobs: bool = False,
+                 speculate_k: int = 0) -> tuple:
         """Split-computing generation. Returns (tokens, SplitStats) — or
         (tokens, SplitStats, logprobs (B, generated) f32) with
         ``with_logprobs=True``: each emitted token's log-probability under
         the raw cloud-head distribution (``core.sampling.token_logprobs``),
         accumulated in a device buffer alongside the token matrix (the
         existing two-tuple return is preserved for legacy callers).
+
+        ``speculate_k`` > 0 turns on SPLIT-BOUNDARY SPECULATIVE DECODING:
+        each round the edge decode-steps its own front segment k times,
+        reading draft tokens off the split-layer hidden state with the
+        model's OWN head (the OPSC front segment doubles as the draft
+        model — zero extra weights), ships the k hidden states as ONE
+        TS+TAB-Q payload, and the cloud verifies all k in a single
+        multi-token call; ``core.sampling.speculative_verify`` accepts a
+        prefix (exact-match for greedy rows — the emitted stream is
+        bit-identical to ``speculate_k=0`` — rejection sampling for
+        temperature/top-k/top-p rows), the rejected tail is rolled back
+        (pool ``truncate``; the dense caches are overwritten in place by
+        the next round before the causal mask could ever expose them), and
+        the round emits 1..k tokens for one uplink round trip.
+        ``SplitStats`` reports ``spec_rounds`` / ``spec_drafted`` /
+        ``spec_accepted`` / ``acceptance_rate`` and ``uplink_round_trips``
+        — the amortization the benchmark
+        (``benchmarks/speculative_split.py``) measures.
 
         ``sampling`` — one ``core.sampling.SamplingParams`` (applied to
         every row) or a list of ``len(prompts)`` — threads the serving
@@ -285,6 +373,11 @@ class SplitEngine:
         # h_buf and the KV caches are sized by cache_len; past it,
         # dynamic_update_slice would clamp and silently corrupt the history
         assert s + max_new_tokens <= self.cache_len, "cache_len too small"
+        if speculate_k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got {speculate_k}")
+        if speculate_k and tokens.ndim != 2:
+            raise NotImplementedError(
+                "speculate_k needs (B, S) token prompts")
         stats = SplitStats()
         samp_ops = None  # None → the exact greedy argmax path
         if sampling is not None:
@@ -418,79 +511,221 @@ class SplitEngine:
         n_out = 0
         i_kv = self.opsc.i_kv
         pos = s
-        for step in range(max_new_tokens):
+        if speculate_k:
+            # ---- speculative rounds: draft on the edge head, verify all k
+            # in ONE cloud call — k uplink round trips become one
             if samp_ops is None:
+                v_keys = jnp.zeros((b, 2), jnp.uint32)
+                v_temp = jnp.zeros((b,), jnp.float32)
+                v_tk = jnp.zeros((b,), jnp.int32)
+                v_tp = jnp.ones((b,), jnp.float32)
                 nxt = self._next_token(logits).astype(tokens.dtype)
             else:
-                keys, temp, tk, tp = samp_ops
-                nxt = self._sample_next(logits, keys, jnp.int32(step), temp,
-                                        tk, tp).astype(tokens.dtype)
-            tok_buf = self._seq_write(tok_buf, nxt, jnp.int32(step))
+                v_keys, v_temp, v_tk, v_tp = samp_ops
+                nxt = self._sample_next(logits, v_keys, jnp.int32(0), v_temp,
+                                        v_tk, v_tp).astype(tokens.dtype)
+            # the first token is sampled from the prefill logits exactly as
+            # the per-token loop samples it (same draw, same fold)
+            tok_buf = self._seq_write(tok_buf, nxt, jnp.int32(0))
             if with_logprobs:
                 lp_buf = self._seq_write(lp_buf, self._tok_lp(logits, nxt),
-                                         jnp.int32(step))
-            n_out = step + 1
-            if step + 1 == max_new_tokens:
-                break
-            t0 = tel.now() if tel is not None else 0.0
-            h, edge_caches = self._edge_front(self.edge_params["blocks"],
-                                              self.edge_params, nxt, edge_caches,
-                                              jnp.int32(pos), decode=True)
-            if tel is not None:
-                self._tspan("edge", "decode", t0, h)
-            fixed_bits = None
-            if compress:
-                h_c, bits = self._compress(h, fixed_bits)
-            else:
-                h_c, bits = h, float(h.size * 16)
-            # Algorithm 2 ladder on the *modeled* total latency
-            w = pos + 1
-            if self.deadline_s is not None:
-                lat = self.latency.total_latency(w, self.opsc.split_layer, bits)
-                if lat > self.deadline_s and i_kv == 1:
-                    i_kv = 0  # drop KV from the uplink accounting
-                    stats.kv_dropped_steps += 1
+                                         jnp.int32(0))
+            n_out = 1
+            cur = nxt  # last emitted, not yet consumed by the model
+            while n_out < max_new_tokens:
+                # kd drafts + the pending token = one k_eff-token payload;
+                # a round emits 1..k_eff tokens, so never draft past the
+                # generation budget
+                kd = min(speculate_k, max_new_tokens - n_out - 1)
+                k_eff = kd + 1
+                t0 = tel.now() if tel is not None else 0.0
+                hs, drafts = [], []
+                for j in range(k_eff):
+                    h, edge_caches = self._edge_front(
+                        self.edge_params["blocks"], self.edge_params, cur,
+                        edge_caches, jnp.int32(pos + j), decode=True)
+                    hs.append(h)
+                    if j + 1 < k_eff:
+                        cur = self._draft_next(
+                            self.edge_params, h).astype(tokens.dtype)
+                        drafts.append(cur)
+                h = jnp.concatenate(hs, axis=1) if k_eff > 1 else hs[0]
+                draft_mat = (jnp.concatenate(drafts, axis=1).astype(jnp.int32)
+                             if drafts else jnp.zeros((b, 0), jnp.int32))
+                if tel is not None:
+                    self._tspan("edge", "draft", t0, h)
+                if compress:
+                    # ONE payload for the whole burst (TAB-Q allocates bits
+                    # per row, so the k-token encode matches k per-token
+                    # encodes bit for bit — the greedy-identity tests
+                    # exercise exactly this)
+                    h_c, bits = self._compress(h)
+                else:
+                    h_c, bits = h, float(h.size * 16)
+                # Algorithm 2 ladder on the *modeled* total latency
+                w = pos + k_eff
+                if self.deadline_s is not None:
                     lat = self.latency.total_latency(
-                        w, self.opsc.split_layer, self._eq3_bits(w, 0))
-                if lat > self.deadline_s:
-                    stats.early_exits += 1
+                        w, self.opsc.split_layer, bits)
+                    if lat > self.deadline_s and i_kv == 1:
+                        i_kv = 0  # drop KV from the uplink accounting
+                        stats.kv_dropped_steps += 1
+                        lat = self.latency.total_latency(
+                            w, self.opsc.split_layer, self._eq3_bits(w, 0))
+                    if lat > self.deadline_s:
+                        stats.early_exits += 1
+                        stats.latency_s += lat
+                        break
                     stats.latency_s += lat
-                    break
-                stats.latency_s += lat
-            stats.uplink_bits_measured += bits
-            stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
-            if tel is not None:
-                tel.event("uplink", track="split:uplink", bits=bits,
-                          stage="decode", step=step, i_kv=i_kv)
-
-            h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
-            n_hist += 1
-            t0 = tel.now() if tel is not None else 0.0
-            if i_kv:
-                if cloud_pool is not None:  # grow each request by one slot
+                stats.uplink_bits_measured += bits
+                stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
+                stats.uplink_round_trips += 1
+                if tel is not None:
+                    tel.event("uplink", track="split:uplink", bits=bits,
+                              stage="speculate", tokens=b * k_eff, i_kv=i_kv)
+                h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
+                t0 = tel.now() if tel is not None else 0.0
+                if i_kv:
+                    if cloud_pool is not None:
+                        for r in range(b):
+                            cloud_pool.append(r, k_eff)
+                        cloud_caches = cloud_pool.device_caches()
+                        posn = pos + np.tile(
+                            np.arange(k_eff, dtype=np.int32), (b, 1))
+                        vlogits, cloud_caches = self._cloud_verify_paged(
+                            self.cloud_params["blocks"], self.cloud_params,
+                            h_c, cloud_caches, jnp.asarray(posn))
+                        cloud_pool.update_from(cloud_caches)
+                        account_pages()
+                    else:
+                        vlogits, cloud_caches = self._cloud_verify(
+                            self.cloud_params["blocks"], self.cloud_params,
+                            h_c, cloud_caches, jnp.int32(pos), decode=True,
+                            tail=k_eff)
+                else:
+                    # stateless cloud re-run over the whole history; only
+                    # the verify columns reach the head
+                    hist = h_buf[:, :n_hist + k_eff]
+                    fresh = jax.tree_util.tree_map(
+                        lambda a: a[self.split_block:],
+                        init_caches(cfg, b, self.cache_len, opts))
+                    vlogits, _ = self._cloud_verify(
+                        self.cloud_params["blocks"], self.cloud_params, hist,
+                        fresh, jnp.int32(0), decode=False, tail=k_eff)
+                if tel is not None:
+                    self._tspan("cloud", "verify", t0, vlogits)
+                out, n_acc, lps = self._spec_verify(
+                    draft_mat, jnp.full((b,), kd, jnp.int32), vlogits,
+                    v_keys, jnp.full((b,), n_out, jnp.int32), v_temp, v_tk,
+                    v_tp)
+                # batch rows march in lockstep: advance by the MINIMUM
+                # accepted run (every row's accepted prefix is exact, so a
+                # faster row's discarded tail is re-derived — never wrong —
+                # by the next round)
+                n_acc_h = np.asarray(n_acc)
+                n = int(n_acc_h.min())
+                stats.spec_rounds += 1
+                stats.spec_drafted += b * kd
+                stats.spec_accepted += int(n_acc_h.sum()) - b
+                if tel is not None:
+                    tel.metrics.observe("split.accepted_tokens", float(n))
+                tok_buf = self._seq_write(
+                    tok_buf, out[:, :n].astype(tok_buf.dtype),
+                    jnp.int32(n_out))
+                if with_logprobs:
+                    lp_buf = self._seq_write(lp_buf, lps[:, :n],
+                                             jnp.int32(n_out))
+                if cloud_pool is not None and n < k_eff:
+                    # scrub the rejected tail: stale positions must never
+                    # survive into the next round's history mask or a swap
+                    # export (the dense-cache paths need no scrub — the
+                    # next round overwrites the same cache slots before the
+                    # causal mask could expose them)
                     for r in range(b):
-                        cloud_pool.append(r, 1)
-                    cloud_caches = cloud_pool.device_caches()
-                logits, cloud_caches = self._cloud_back(
-                    self.cloud_params["blocks"], self.cloud_params, h_c,
-                    cloud_caches, jnp.int32(pos), decode=True)
-                if cloud_pool is not None:
-                    cloud_pool.update_from(cloud_caches)
-                    account_pages()
-            else:
-                # stateless cloud: re-run the back segment over the history
-                # (the paper's "losing the benefits of the cache")
-                hist = h_buf[:, :n_hist]
-                fresh = jax.tree_util.tree_map(
-                    lambda a: a[self.split_block:],
-                    init_caches(cfg, b, self.cache_len, opts))
-                logits, _ = self._cloud_back(self.cloud_params["blocks"],
-                                             self.cloud_params, hist, fresh,
-                                             jnp.int32(0), decode=False)
-            if tel is not None:
-                self._tspan("cloud", "decode", t0, logits)
-            pos += 1
-            stats.tokens_generated += 1
+                        cloud_pool.truncate(r, pos + n)
+                cur = out[:, n - 1:n].astype(tokens.dtype)
+                pos += n
+                n_hist += n
+                n_out += n
+                stats.tokens_generated += n
+        else:
+            for step in range(max_new_tokens):
+                if samp_ops is None:
+                    nxt = self._next_token(logits).astype(tokens.dtype)
+                else:
+                    keys, temp, tk, tp = samp_ops
+                    nxt = self._sample_next(logits, keys, jnp.int32(step),
+                                            temp, tk, tp).astype(tokens.dtype)
+                tok_buf = self._seq_write(tok_buf, nxt, jnp.int32(step))
+                if with_logprobs:
+                    lp_buf = self._seq_write(lp_buf, self._tok_lp(logits, nxt),
+                                             jnp.int32(step))
+                n_out = step + 1
+                if step + 1 == max_new_tokens:
+                    break
+                t0 = tel.now() if tel is not None else 0.0
+                h, edge_caches = self._edge_front(
+                    self.edge_params["blocks"], self.edge_params, nxt,
+                    edge_caches, jnp.int32(pos), decode=True)
+                if tel is not None:
+                    self._tspan("edge", "decode", t0, h)
+                fixed_bits = None
+                if compress:
+                    h_c, bits = self._compress(h, fixed_bits)
+                else:
+                    h_c, bits = h, float(h.size * 16)
+                # Algorithm 2 ladder on the *modeled* total latency
+                w = pos + 1
+                if self.deadline_s is not None:
+                    lat = self.latency.total_latency(
+                        w, self.opsc.split_layer, bits)
+                    if lat > self.deadline_s and i_kv == 1:
+                        i_kv = 0  # drop KV from the uplink accounting
+                        stats.kv_dropped_steps += 1
+                        lat = self.latency.total_latency(
+                            w, self.opsc.split_layer, self._eq3_bits(w, 0))
+                    if lat > self.deadline_s:
+                        stats.early_exits += 1
+                        stats.latency_s += lat
+                        break
+                    stats.latency_s += lat
+                stats.uplink_bits_measured += bits
+                stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
+                stats.uplink_round_trips += 1
+                if tel is not None:
+                    tel.event("uplink", track="split:uplink", bits=bits,
+                              stage="decode", step=step, i_kv=i_kv)
+
+                h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
+                n_hist += 1
+                t0 = tel.now() if tel is not None else 0.0
+                if i_kv:
+                    if cloud_pool is not None:  # grow each request by one
+                        for r in range(b):
+                            cloud_pool.append(r, 1)
+                        cloud_caches = cloud_pool.device_caches()
+                    logits, cloud_caches = self._cloud_back(
+                        self.cloud_params["blocks"], self.cloud_params, h_c,
+                        cloud_caches, jnp.int32(pos), decode=True)
+                    if cloud_pool is not None:
+                        cloud_pool.update_from(cloud_caches)
+                        account_pages()
+                else:
+                    # stateless cloud: re-run the back segment over the
+                    # history (the paper's "losing the benefits of the
+                    # cache")
+                    hist = h_buf[:, :n_hist]
+                    fresh = jax.tree_util.tree_map(
+                        lambda a: a[self.split_block:],
+                        init_caches(cfg, b, self.cache_len, opts))
+                    logits, _ = self._cloud_back(self.cloud_params["blocks"],
+                                                 self.cloud_params, hist,
+                                                 fresh, jnp.int32(0),
+                                                 decode=False)
+                if tel is not None:
+                    self._tspan("cloud", "decode", t0, logits)
+                pos += 1
+                stats.tokens_generated += 1
 
         if tel is not None:
             # mirror the call's SplitStats into the shared registry — ONE
@@ -506,6 +741,12 @@ class SplitEngine:
             m.count("split.early_exits", stats.early_exits)
             m.count("split.kv_dropped_steps", stats.kv_dropped_steps)
             m.count("split.deadline_latency_s", stats.latency_s)
+            m.count("split.uplink_round_trips", stats.uplink_round_trips)
+            if stats.spec_rounds:
+                m.count("split.spec_rounds", stats.spec_rounds)
+                m.count("split.spec_drafted", stats.spec_drafted)
+                m.count("split.spec_accepted", stats.spec_accepted)
+                m.gauge("split.acceptance_rate", stats.acceptance_rate)
             if cloud_pool is not None:
                 m.gauge("split.cloud_pool_bytes_peak",
                         stats.cloud_pool_bytes_peak)

@@ -150,6 +150,35 @@ def test_decode_attention_matches_ref(s, bs, g, kh):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.kernel_grid
+@pytest.mark.parametrize("s,bs", [(320, 64), (512, 128), (96, 32),
+                                  (130, 64), (33, 32)])
+@pytest.mark.parametrize("g,kh", [(8, 2), (2, 6), (1, 1)])
+@pytest.mark.parametrize("hd", [32, 128])
+def test_decode_attention_extended_grid(s, bs, g, kh, hd):
+    """Deep-CI sweep (``-m kernel_grid``): cache lengths, GQA ratios and
+    head dims beyond the tier-1 grid, including bs-misaligned and
+    single-block caches. Tier-1 keeps its own smaller grid — this is
+    additive coverage, not a relocation."""
+    from repro.kernels.ops import decode_attention
+
+    rng = np.random.default_rng(s * 7 + g + hd)
+    b = 2
+    q = jnp.asarray(rng.normal(size=(b, kh, g, hd)), jnp.float32)
+    kc = jnp.asarray(rng.integers(-127, 128, (b, kh, s, hd)), jnp.int8)
+    vc = jnp.asarray(rng.integers(-127, 128, (b, kh, s, hd)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.005, 0.02, (b, kh, s)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.02, (b, kh, s)), jnp.float32)
+    pos = np.arange(s)[None].repeat(b, 0)
+    pos[:, (3 * s) // 4:] = -1  # ring-style hole in the tail
+    kv_pos = jnp.asarray(pos, jnp.int32)
+    got = decode_attention(q, kc, ks, vc, vs, kv_pos, jnp.int32(s),
+                           block_s=bs)
+    want = ref.decode_attention_ref(q, kc, ks, vc, vs, kv_pos, jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_decode_attention_causal_bound():
     from repro.kernels.ops import decode_attention
 

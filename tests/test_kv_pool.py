@@ -370,6 +370,75 @@ def test_page_bytes_written_counts_shared_pages_once():
     pool.release_prefix(h)
 
 
+# ------------------------------------------------- speculative KV rollback
+
+
+def test_truncate_rolls_back_rejected_tail():
+    """The speculative-rollback primitive: truncate scrubs stored positions
+    >= new_len on device (a rejected draft token can never be attended or
+    swapped out), keeps the pages allocated (they sit inside the slot's
+    reservation; the next append rewrites the same page slots), and leaves
+    everything below the cut untouched."""
+    pool = make_pool(num_pages=16, page_size=4)
+    s = pool.admit(6)            # pages p0 (pos 0..3), p1 (pos 4..5)
+    pool.commit_prefill(s, 6)
+    pool.append(s, 3)            # draft burst: pos 6..8 — p1 fills, p2 opens
+    p0, p1, p2 = (int(p) for p in pool.block_tables[s][:3])
+    pool._caches = tuple(
+        type(c)(c.k, c.v, c.k_scale, c.v_scale,
+                c.pos.at[:, p0].set(jnp.arange(4, dtype=jnp.int32))
+                     .at[:, p1].set(jnp.arange(4, 8, dtype=jnp.int32))
+                     .at[:, p2].set(jnp.asarray([8, -1, -1, -1], jnp.int32)),
+                c.block_table)
+        for c in pool._caches)
+    used = pool.pages_in_use
+    pool.truncate(s, 6)          # verify rejected the whole 3-token draft
+    assert int(pool.lengths[s]) == 6
+    assert pool.pages_in_use == used  # rollback never frees pages
+    for c in pool._caches:
+        np.testing.assert_array_equal(
+            np.asarray(c.pos[:, p0]), np.tile(np.arange(4), (pool.nb, 1)))
+        np.testing.assert_array_equal(
+            np.asarray(c.pos[:, p1]), np.tile([4, 5, -1, -1], (pool.nb, 1)))
+        assert int(jnp.max(c.pos[:, p2])) == -1
+    # bounds: rolling back to zero or past the length is a caller bug
+    with pytest.raises(ValueError, match="outside"):
+        pool.truncate(s, 0)
+    with pytest.raises(ValueError, match="outside"):
+        pool.truncate(s, 7)
+
+
+def test_truncate_refuses_to_scrub_shared_pages():
+    """A rollback that would reach into a refcount > 1 page is a caller
+    bug — shared prefix tokens are immutable. The refusal must leave pool
+    state AND the shared page's device positions untouched; once the other
+    reference drops, the same rollback proceeds."""
+    pool = make_pool(num_pages=16, page_size=4)
+    a = pool.admit(8)
+    pool.commit_prefill(a, 8)
+    p1 = int(pool.block_tables[a][1])
+    pool._caches = tuple(
+        type(c)(c.k, c.v, c.k_scale, c.v_scale,
+                c.pos.at[:, p1].set(jnp.arange(4, 8, dtype=jnp.int32)),
+                c.block_table)
+        for c in pool._caches)
+    h = pool.share_prefix(a, 8)  # p1 now refcount 2
+    before_ref = pool.refcount.copy()
+    before_len = pool.lengths.copy()
+    with pytest.raises(ValueError, match="shared page"):
+        pool.truncate(a, 6)      # the cut lands inside the shared page
+    np.testing.assert_array_equal(pool.refcount, before_ref)
+    np.testing.assert_array_equal(pool.lengths, before_len)
+    for c in pool._caches:
+        np.testing.assert_array_equal(np.asarray(c.pos[:, p1]),
+                                      np.tile([4, 5, 6, 7], (pool.nb, 1)))
+    pool.release_prefix(h)
+    pool.truncate(a, 6)          # exclusive again → rollback proceeds
+    for c in pool._caches:
+        np.testing.assert_array_equal(np.asarray(c.pos[:, p1]),
+                                      np.tile([4, 5, -1, -1], (pool.nb, 1)))
+
+
 # --------------------------------------------------- randomized invariants
 
 
@@ -413,14 +482,16 @@ def _check_pool_invariants(pool, handles):
 
 def test_property_random_admit_fork_append_preempt_free_never_corrupts():
     """Random walk over the full allocator API — admit / share / fork /
-    append / preempt-style free / release — holding every refcount
-    invariant at each step. This is the double-free / leak / over-capacity
-    property test for the CoW ownership model."""
+    append / preempt-style free / release / speculative truncate-rollback —
+    holding every refcount invariant at each step. This is the double-free /
+    leak / over-capacity property test for the CoW ownership model; the
+    truncate op additionally pins that a rollback never mutates a
+    refcount > 1 page (the refusal is atomic)."""
     rng = np.random.default_rng(12345)
     pool = make_pool(num_pages=20, page_size=4, max_requests=5)
     handles: list = []
     for step in range(250):
-        op = rng.integers(0, 5)
+        op = rng.integers(0, 6)
         active = list(np.flatnonzero(pool.active))
         try:
             if op == 0:  # admit, sometimes onto a random live prefix
@@ -448,6 +519,22 @@ def test_property_random_admit_fork_append_preempt_free_never_corrupts():
             elif op == 4 and handles:  # registry drops a prefix
                 h = handles[rng.integers(len(handles))]
                 pool.release_prefix(h)
+            elif op == 5 and active:  # speculative rollback: truncate a tail
+                s = active[rng.integers(len(active))]
+                length = int(pool.lengths[s])
+                new_len = int(rng.integers(1, length + 1))
+                before = (pool.refcount.copy(), pool.lengths.copy(),
+                          np.asarray(pool.block_tables).copy())
+                try:
+                    pool.truncate(s, new_len)
+                    assert int(pool.lengths[s]) == new_len
+                except ValueError:
+                    # the cut reached a CoW-shared page: refused atomically —
+                    # refcounts, lengths and block tables must be untouched
+                    np.testing.assert_array_equal(pool.refcount, before[0])
+                    np.testing.assert_array_equal(pool.lengths, before[1])
+                    np.testing.assert_array_equal(
+                        np.asarray(pool.block_tables), before[2])
         except PoolExhaustedError:
             pass  # backpressure is a legal outcome; state must be unchanged
         _check_pool_invariants(pool, handles)

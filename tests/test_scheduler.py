@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.sampling import SamplingParams
 from repro.models.transformer import RuntimeOpts, init_params
 from repro.serving.engine import Engine
 from repro.serving.scheduler import Scheduler
@@ -274,3 +275,81 @@ def test_swap_snapshot_excludes_speculative_append(tiny_model):
                                   eng.generate(a[None], 8).tokens[0])
     np.testing.assert_array_equal(results[rb],
                                   eng.generate(b[None], 8).tokens[0])
+
+
+# ----------------------------------------------- split-boundary speculation
+
+
+def _repetitive_prompts(cfg, n=4, seed=7):
+    """Prompts with a repeating 3-gram: prompt-lookup drafting has signal,
+    so accepted bursts actually occur (the random-init model still rejects
+    plenty — both accept and rollback paths run)."""
+    rng = np.random.default_rng(seed)
+    return [np.tile(rng.integers(0, cfg.vocab_size, (3,)), 4)[:9]
+            .astype(np.int32) for _ in range(n)]
+
+
+def _serve_spec(cfg, params, mode, prompts, max_new, k, **kw):
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=32, page_size=4,
+                      max_slots=3, tick_mode=mode, speculate_k=k, **kw)
+    rids = [sched.submit(p, max_new) for p in prompts]
+    res = sched.run()
+    return [res[r] for r in rids], sched
+
+
+@pytest.mark.parametrize("mode", ["packed", "chunked", "wave"])
+def test_speculative_scheduler_matches_engine(tiny_model, mode):
+    """Tentpole acceptance: ``speculate_k`` NEVER changes the greedy
+    stream — bit-identical to the per-request Engine in every tick mode —
+    while the verify rounds fold multiple tokens into single decode
+    ticks (fewer steps than the k=0 run of the same workload)."""
+    cfg, params = tiny_model
+    prompts = _repetitive_prompts(cfg)
+    max_new = 6
+    _, s0 = _serve_spec(cfg, params, mode, prompts, max_new, 0)
+    outs, s = _serve_spec(cfg, params, mode, prompts, max_new, 3)
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    for p, got in zip(prompts, outs):
+        np.testing.assert_array_equal(
+            got, eng.generate(p[None], max_new).tokens[0])
+    st, st0 = s.stats, s0.stats
+    assert st.steps < st0.steps, "speculation must reduce decode ticks"
+    assert st.spec_rounds > 0 and st.spec_drafted >= st.spec_accepted > 0
+    assert 0.0 < st.acceptance_rate <= 1.0
+    # multi-token emission: indices strictly ordered with finite logprobs
+    seen = {}
+    for rid, idx, tok, lp in s.drain_events():
+        assert idx == seen.get(rid, -1) + 1 and np.isfinite(lp)
+        seen[rid] = idx
+
+
+def test_speculative_per_request_cap(tiny_model):
+    """``SamplingParams(speculate_k=1)`` lowers a request's draft burst
+    below the scheduler-level k: no verify round may carry more than one
+    draft token, and the stream still equals the Engine's."""
+    cfg, params = tiny_model
+    p = _repetitive_prompts(cfg, n=1)[0]
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=32, page_size=4,
+                      max_slots=3, tick_mode="chunked", speculate_k=3)
+    rid = sched.submit(p, sampling=SamplingParams(max_tokens=6, speculate_k=1))
+    res = sched.run()
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    np.testing.assert_array_equal(res[rid], eng.generate(p[None], 6).tokens[0])
+    st = sched.stats
+    assert st.spec_rounds > 0
+    assert st.spec_drafted <= st.spec_rounds  # capped at 1 draft per round
+
+
+def test_speculative_rejection_rolls_back_exactly(tiny_model):
+    """Prompt-lookup drafts continue the prompt's repetition, but the
+    random-init model mostly doesn't — rejected tails are truncated out of
+    the pool every round, and the stream must still be bit-identical to
+    the Engine with the pool draining clean."""
+    cfg, params = tiny_model
+    prompts = _repetitive_prompts(cfg, n=3, seed=11)
+    outs, s = _serve_spec(cfg, params, "chunked", prompts, 7, 3)
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    for p, got in zip(prompts, outs):
+        np.testing.assert_array_equal(got, eng.generate(p[None], 7).tokens[0])
+    assert s.stats.spec_accepted < s.stats.spec_drafted  # rollbacks happened
+    assert s.pool.pages_in_use == 0

@@ -354,3 +354,65 @@ def test_fused_backend_mixed_lengths_and_stop(tiny_model):
     np.testing.assert_array_equal(outs[r1].full_tokens, free1[: 5 + 2])
     np.testing.assert_array_equal(outs[r2].full_tokens,
                                   eng.generate(p2[None], 3).tokens[0])
+
+
+# ------------------------------------- speculative multi-token emission
+
+
+def test_speculative_multi_token_events_ordered_across_backends(tiny_model):
+    """A verify round emits SEVERAL tokens at once — the API must still
+    stream ``TokenEvent``s in strict index order, with each token's
+    logprob taken from the VERIFY logits: on the paged backend those match
+    the non-speculative run's decode logprobs to float32 round-off (the
+    verify reads the same quantized cache a sequential decode would; the
+    batched (1+k)-row head matmul may differ in the last ULP)."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(13)
+    p = np.tile(rng.integers(0, cfg.vocab_size, (3,)), 3)  # repetitive:
+    #            prompt-lookup drafts land, so multi-token bursts occur
+    sp = SamplingParams(max_tokens=6, speculate_k=3)
+
+    def stream_tokens(srv, sp_):
+        rid = srv.submit(p, sp_)
+        evs = [e for e in srv.stream() if e.rid == rid and not e.finished]
+        return rid, evs
+
+    # paged: speculation on vs off — same tokens, same RAW-model logprobs
+    _, evs0 = stream_tokens(_paged(cfg, params), SamplingParams(max_tokens=6))
+    srv = _paged(cfg, params, speculate_k=3)
+    _, evs = stream_tokens(srv, sp)
+    assert srv.backend.scheduler.stats.spec_accepted > 0  # bursts happened
+    assert [e.index for e in evs] == list(range(6))
+    assert [e.token for e in evs] == [e.token for e in evs0]
+    np.testing.assert_allclose(
+        np.asarray([e.logprob for e in evs], np.float32),
+        np.asarray([e.logprob for e in evs0], np.float32),
+        rtol=0, atol=1e-6)
+
+    # fused: no incremental tick to amortize — speculate_k is documented
+    # as ignored, never an error; ordering and tokens unchanged
+    srv = LLMServer(cfg, params, OPTS_Q, backend="fused", cache_len=32)
+    _, evs_f = stream_tokens(srv, sp)
+    assert [e.index for e in evs_f] == list(range(6))
+    assert [e.token for e in evs_f] == [e.token for e in evs0]
+
+    # split: one k-token uplink per round — events stay index-ordered with
+    # per-token logprobs, and the carried SplitStats show the amortization
+    opsc = OPSCConfig(split_layer=1, qw_front=16, i_kv=1)
+
+    def split_srv():
+        return LLMServer(cfg, params, OPTS, backend="split", opsc=opsc,
+                         compress=False, cache_len=32)
+
+    _, evs_ref = stream_tokens(split_srv(), SamplingParams(max_tokens=6))
+    srv = split_srv()
+    rid, evs_s = stream_tokens(srv, sp)
+    assert [e.index for e in evs_s] == list(range(len(evs_s)))
+    assert [e.token for e in evs_s] == [e.token for e in evs_ref]
+    assert all(e.logprob is not None and np.isfinite(e.logprob)
+               for e in evs_s)
+    st = srv.outputs()[rid].split_stats
+    assert st.spec_rounds > 0 and st.spec_drafted > 0
+    # never MORE trips than tokens; the strict amortization (with real
+    # acceptance) is pinned in test_serving.py and the benchmark
+    assert st.uplink_round_trips <= len(evs_s)

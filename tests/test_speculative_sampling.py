@@ -1,0 +1,170 @@
+"""``core.sampling.speculative_verify``: the sampler half of split-boundary
+speculative decoding. Greedy lanes must be EXACT — emission is the argmax of
+the verify logits whatever the drafter proposed — and non-greedy lanes must
+preserve the sampling distribution (rejection sampling against the point-mass
+draft proposal), pinned here statistically against ``sample_tokens`` draws
+from the very same logits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import (SamplingParams, sample_tokens,
+                                 sampling_operands, speculative_verify,
+                                 token_logprobs)
+
+
+def _ops(params):
+    o = sampling_operands(params)
+    return o["keys"], o["temperature"], o["top_k"], o["top_p"]
+
+
+def _verify(draft, draft_len, logits, params, t0):
+    keys, temp, tk, tp = _ops(params)
+    r = len(params)
+    out, n, lps = jax.jit(speculative_verify)(
+        jnp.asarray(draft, jnp.int32).reshape(r, -1),
+        jnp.asarray(draft_len, jnp.int32).reshape(r),
+        jnp.asarray(logits, jnp.float32),
+        keys, jnp.asarray(t0, jnp.int32).reshape(r), temp, tk, tp)
+    return np.asarray(out), np.asarray(n), np.asarray(lps)
+
+
+def _rand_logits(r, k1, v, seed=0, scale=2.0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(r, k1, v)).astype(np.float32) * scale
+
+
+# ------------------------------------------------------------ greedy lane
+
+
+def test_greedy_accepts_matching_prefix_and_emits_argmax():
+    """n_out = matched prefix + 1; every emitted token IS the argmax."""
+    logits = _rand_logits(3, 4, 16, seed=1)
+    am = logits.argmax(-1)
+    draft = np.zeros((3, 3), np.int32)
+    draft[0] = am[0, :3]  # full match -> all 3 + bonus
+    draft[1] = [am[1, 0], (am[1, 1] + 1) % 16, am[1, 2]]  # break at 1
+    draft[2] = [(am[2, 0] + 1) % 16, am[2, 1], am[2, 2]]  # break at 0
+    out, n, _ = _verify(draft, [3, 3, 3], logits,
+                        [SamplingParams()] * 3, [0, 0, 0])
+    np.testing.assert_array_equal(n, [4, 2, 1])
+    for r in range(3):
+        np.testing.assert_array_equal(out[r, : n[r]], am[r, : n[r]])
+
+
+def test_greedy_emission_is_draft_independent():
+    """Two verifies of the same logits with DIFFERENT drafts emit the same
+    accepted stream (prefixes of the argmax chain) — a bad drafter can only
+    shorten acceptance, never corrupt output."""
+    logits = _rand_logits(2, 5, 32, seed=2)
+    am = logits.argmax(-1)
+    rng = np.random.default_rng(3)
+    params = [SamplingParams(), SamplingParams(top_k=1, temperature=1.5,
+                                               seed=9)]  # both greedy lanes
+    for trial in range(4):
+        draft = rng.integers(0, 32, (2, 4)).astype(np.int32)
+        out, n, _ = _verify(draft, [4, 4], logits, params, [0, 0])
+        for r in range(2):
+            np.testing.assert_array_equal(out[r, : n[r]], am[r, : n[r]])
+
+
+def test_draft_len_zero_degenerates_to_sample_tokens():
+    """A round with no drafts must emit EXACTLY the token sample_tokens
+    would draw at the same generation index — greedy and seeded sampling
+    rows alike (the scheduler's no-draft-available slots ride this)."""
+    params = [SamplingParams(), SamplingParams(temperature=0.9, seed=5),
+              SamplingParams(temperature=1.3, top_k=7, seed=6),
+              SamplingParams(temperature=0.7, top_p=0.8, seed=7)]
+    logits = _rand_logits(4, 1, 64, seed=4)
+    for t in (0, 3, 17):
+        out, n, _ = _verify(np.zeros((4, 0)), [0] * 4, logits, params,
+                            [t] * 4)
+        keys, temp, tk, tp = _ops(params)
+        want = np.asarray(jax.jit(sample_tokens)(
+            jnp.asarray(logits[:, 0]), keys,
+            jnp.full((4,), t, jnp.int32), temp, tk, tp))
+        np.testing.assert_array_equal(n, [1] * 4)
+        np.testing.assert_array_equal(out[:, 0], want)
+
+
+def test_logprobs_are_verify_model_logprobs():
+    logits = _rand_logits(2, 3, 16, seed=8)
+    draft = logits.argmax(-1)[:, :2].astype(np.int32)
+    out, n, lps = _verify(draft, [2, 2], logits,
+                          [SamplingParams()] * 2, [0, 0])
+    want = np.asarray(token_logprobs(jnp.asarray(logits.reshape(-1, 16)),
+                                     jnp.asarray(out.reshape(-1))))
+    np.testing.assert_allclose(lps.reshape(-1), want, rtol=1e-6)
+
+
+# ------------------------------------------- rejection-sampling statistics
+
+
+def _freqs(tokens, v):
+    return np.bincount(np.asarray(tokens).reshape(-1), minlength=v) \
+        / tokens.size
+
+
+def test_rejected_first_position_preserves_distribution():
+    """Marginal distribution of the FIRST emitted token under speculation
+    (accept draft w.p. p(draft), else residual) must match plain
+    sample_tokens draws from the same logits. R identical rows with
+    distinct seeds give the empirical law in one compiled call."""
+    v, r = 12, 4000
+    rng = np.random.default_rng(11)
+    row = (rng.normal(size=(v,)) * 1.5).astype(np.float32)
+    logits = np.broadcast_to(row, (r, 1, v)).copy()[:, None, :][:, 0]
+    logits = logits.reshape(r, 1, v)
+    params = [SamplingParams(temperature=1.0, seed=s) for s in range(r)]
+    draft = np.full((r, 1), int(row.argmax()), np.int32)  # high-prob draft
+    out, n, _ = _verify(draft, [1] * r, logits, params, [0] * r)
+    assert np.all(n >= 1)
+    spec = _freqs(out[:, 0], v)
+
+    keys, temp, tk, tp = _ops(params)
+    base = np.asarray(jax.jit(sample_tokens)(
+        jnp.asarray(logits[:, 0]), keys, jnp.zeros((r,), jnp.int32),
+        temp, tk, tp))
+    ref = _freqs(base, v)
+    target = np.exp(row - row.max())
+    target /= target.sum()
+    # both empirical laws near the analytic target, and near each other
+    assert np.abs(spec - target).sum() < 0.08
+    assert np.abs(spec - ref).sum() < 0.10
+
+
+def test_acceptance_probability_is_target_mass_of_draft():
+    """The draft token is accepted with probability p(draft) under the
+    filtered+tempered target — the rejection-sampling identity's other
+    half. Estimated over R seeds, against the analytic softmax mass."""
+    v, r = 10, 4000
+    rng = np.random.default_rng(13)
+    row = (rng.normal(size=(v,)) * 1.2).astype(np.float32)
+    logits = np.broadcast_to(row, (r, v)).reshape(r, 1, v).copy()
+    d = int(np.argsort(row)[-2])  # a mid-mass token
+    params = [SamplingParams(temperature=1.0, seed=s) for s in range(r)]
+    draft = np.full((r, 1), d, np.int32)
+    out, n, _ = _verify(draft, [1] * r, logits, params, [0] * r)
+    accepted = (out[:, 0] == d) & (n >= 1)
+    p = np.exp(row - row.max())
+    p /= p.sum()
+    # accepted rows include residual draws that landed on d by chance:
+    # P(emit d) = p(d) + (1 - p(d)) * 0 (residual excludes d) -> exactly p(d)
+    assert abs(accepted.mean() - p[d]) < 0.04
+
+
+def test_top_k_top_p_speculation_stays_in_support():
+    """Accepted/corrected tokens under top-k / top-p rows never leave the
+    filtered support, exactly like sample_tokens."""
+    v, r, kd = 16, 512, 2
+    logits = _rand_logits(r, kd + 1, v, seed=17, scale=1.0)
+    params = [SamplingParams(temperature=1.1, top_k=4, seed=s)
+              for s in range(r)]
+    rng = np.random.default_rng(19)
+    draft = rng.integers(0, v, (r, kd)).astype(np.int32)
+    out, n, _ = _verify(draft, [kd] * r, logits, params, [0] * r)
+    topk = np.argsort(logits, axis=-1)[..., -4:]
+    for row in range(r):
+        for j in range(n[row]):
+            assert out[row, j] in topk[row, j]
