@@ -182,6 +182,8 @@ def bench_chunked_prefill(smoke: bool = False):
         rec[name] = entry
         rows.append((f"chunked_prefill/{name}_ttft_reduction", 0.0,
                      entry["ttft_reduction_vs_wave"]))
+    from benchmarks.common import env_section
+    rec.update(env_section())
     os.makedirs(OUT_DIR, exist_ok=True)
     out = os.path.join(OUT_DIR, "chunked_prefill_smoke.json" if smoke
                        else "chunked_prefill.json")

@@ -107,6 +107,23 @@ def timeit_us(fn, n: int = 5) -> float:
     return (time.time() - t0) / n * 1e6
 
 
+def env_section(mesh=None, deployment: str | None = None) -> dict:
+    """The benchmark-artifact environment block: device topology plus the
+    serving deployment the numbers were measured under — without it a
+    JSON artifact from a forced-4-device run is indistinguishable from a
+    single-device one. Spliced into every benchmark's JSON."""
+    env = {
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+    }
+    if mesh is not None:
+        env["mesh"] = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+    if deployment is not None:
+        env["deployment"] = deployment
+    return {"env": env}
+
+
 def telemetry_section(tracer) -> dict:
     """The benchmark-artifact telemetry block: the tracer's flat metrics
     plus the SLO percentiles benchmarks quote (TTFT/TPOT/tick latency).

@@ -107,6 +107,8 @@ def bench_decode_path():
         rec["fp16"]["resident_bytes"] / rec["int8"]["resident_bytes"], 2)
     rec["stream_bytes_reduction_vs_fp16"] = round(
         rec["fp16"]["stream_bytes"] / rec["int8"]["stream_bytes"], 2)
+    from benchmarks.common import env_section
+    rec.update(env_section())
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, "decode_path.json"), "w") as f:
         json.dump(rec, f, indent=1)

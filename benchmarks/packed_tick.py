@@ -191,6 +191,8 @@ def bench_packed_tick(smoke: bool = False, trace: str | None = None):
         rows.append((f"packed_tick/trace", 0.0,
                      f"spans={len(tracer.spans)} ticks={len(tracer.ticks)} "
                      f"-> {trace}"))
+    from benchmarks.common import env_section
+    rec.update(env_section())
     os.makedirs(OUT_DIR, exist_ok=True)
     out = os.path.join(OUT_DIR, "packed_tick_smoke.json" if smoke
                        else "packed_tick.json")

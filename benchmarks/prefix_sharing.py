@@ -178,6 +178,8 @@ def bench_prefix_sharing(smoke: bool = False):
                          f"match={m['outputs_match_baseline']}"))
         rows.append((f"prefix_sharing/{name}_mem_reduction", 0.0,
                      f"shared={round(red, 2)}x lazy={round(red_lazy, 2)}x"))
+    from benchmarks.common import env_section
+    rec.update(env_section())
     os.makedirs(OUT_DIR, exist_ok=True)
     out = os.path.join(OUT_DIR, "prefix_sharing_smoke.json" if smoke
                        else "prefix_sharing.json")

@@ -151,6 +151,8 @@ def bench_ragged_batch(smoke: bool = False):
                      f"resident={bucketed['resident_bytes']}B"))
         rows.append((f"ragged_batch/{name}_mem_reduction", 0.0,
                      round(mem_red, 2)))
+    from benchmarks.common import env_section
+    rec.update(env_section())
     os.makedirs(OUT_DIR, exist_ok=True)
     out = os.path.join(OUT_DIR, "ragged_batch_smoke.json" if smoke
                        else "ragged_batch.json")

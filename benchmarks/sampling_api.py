@@ -160,6 +160,8 @@ def bench_sampling_api(smoke: bool = False):
     if smoke:
         rows += _smoke_three_backends(cfg, params, opts)
         rec["three_backend_smoke"] = "passed"
+    from benchmarks.common import env_section
+    rec.update(env_section())
     os.makedirs(OUT_DIR, exist_ok=True)
     out = os.path.join(OUT_DIR, "sampling_api_smoke.json" if smoke
                        else "sampling_api.json")

@@ -1,0 +1,188 @@
+"""sharded_serving benchmark: decode/packed ticks over 1/2/4-device meshes
+plus the disaggregated prefill→decode deployment's page-transport costs.
+
+Forces ``--xla_force_host_platform_device_count=4`` BEFORE jax imports, so
+one process hosts every topology: sub-meshes over ``jax.devices()[:n]``
+give the 1-, 2- and 4-device columns. On CPU the mesh columns measure
+DISPATCH overhead (shard_map partitioning, the page-axis all_gather, the
+cross-device sampling hop) — wall-clock scaling is a TPU quantity; what IS
+exact on any backend: bit-identical greedy outputs across every topology,
+the compiled-shape count, and the per-request page-transfer bytes/latency
+of the disaggregated column (read back from the PR 7 telemetry spans the
+page-stream transport emits). JSON artifact under
+experiments/sharded_serving/.
+
+  PYTHONPATH=src python -m benchmarks.sharded_serving [--smoke]
+
+``--smoke`` shrinks the workload — the CI sharded-smoke step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+# must land in the environment before ANY jax import in this process
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "sharded_serving")
+
+JOBS = [(24, 8), (6, 12), (12, 10), (8, 12), (16, 8), (5, 12)]
+SMOKE_JOBS = [(12, 4), (5, 6), (8, 4)]
+PAGE_SIZE = 4
+MAX_SLOTS = 3
+DEVICE_COUNTS = (1, 2, 4)
+
+
+def _build():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.transformer import RuntimeOpts, init_params
+
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opts = RuntimeOpts(q_chunk=16, kv_chunk=32, remat=False,
+                       quantized_kv=True, moe_capacity_factor=0.0)
+    return cfg, params, opts
+
+
+def _drain(sched, jobs, prompts):
+    rids = [sched.submit(p, mn) for p, (_, mn) in zip(prompts, jobs)]
+    t0 = time.time()
+    while sched.step():
+        pass
+    wall = time.time() - t0
+    total = sum(mn for _, mn in jobs)
+    return rids, wall, total
+
+
+def _mesh_column(cfg, params, opts, jobs, prompts, pages, n_dev):
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.scheduler import Scheduler
+
+    mesh = make_serving_mesh(cfg.pattern[0].mixer.num_kv_heads,
+                             devices=jax.devices()[:n_dev])
+    max_seq = max(n + mn for n, mn in jobs)
+    sched = Scheduler(cfg, params, opts, num_pages=pages,
+                      page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+                      max_seq_len=max_seq, tick_mode="packed", mesh=mesh)
+    rids, wall, total = _drain(sched, jobs, prompts)
+    return sched, rids, mesh, {
+        "devices": n_dev,
+        "mesh": {a: int(mesh.shape[a]) for a in mesh.axis_names},
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(total / wall, 2),
+        "compiled_shapes": sched.stats.compiled_shapes,
+        "packed_ticks": sched.stats.packed_ticks,
+    }
+
+
+def _disaggregated_column(cfg, params, opts, jobs, prompts, pages):
+    from repro.serving.page_transport import DisaggregatedScheduler
+    from repro.serving.telemetry import Tracer
+
+    tracer = Tracer()
+    max_seq = max(n + mn for n, mn in jobs)
+    ds = DisaggregatedScheduler(cfg, params, opts, telemetry=tracer,
+                                num_pages=pages, page_size=PAGE_SIZE,
+                                max_slots=MAX_SLOTS, max_seq_len=max_seq,
+                                tick_mode="packed")
+    rids, wall, total = _drain(ds, jobs, prompts)
+    spans = [sp for sp in tracer.spans if sp.name == "page_stream"]
+    by_rid: dict = {}
+    for sp in spans:
+        e = by_rid.setdefault(sp.rid, {"bytes": 0, "latency_s": 0.0,
+                                       "layers": 0})
+        e["bytes"] += sp.attrs["bytes"]
+        e["latency_s"] += sp.duration
+        e["layers"] += 1
+    m = tracer.metrics_dict()
+    return ds, rids, {
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(total / wall, 2),
+        "transfers": ds.transport.transfers,
+        "transferred_bytes": ds.transport.bytes_moved,
+        "transfer_bytes_p50": m.get("transport.page_stream.bytes.p50"),
+        "transfer_bytes_p99": m.get("transport.page_stream.bytes.p99"),
+        "per_request": {
+            int(r): {"bytes": e["bytes"],
+                     "latency_us": round(e["latency_s"] * 1e6, 1),
+                     "layers": e["layers"]}
+            for r, e in sorted(by_rid.items())},
+    }
+
+
+def bench_sharded_serving(smoke: bool = False):
+    import numpy as np
+
+    from repro.serving.engine import Engine
+
+    cfg, params, opts = _build()
+    jobs = SMOKE_JOBS if smoke else JOBS
+    pages = 24 if smoke else 48
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n, _ in jobs]
+    eng = Engine(cfg, params, opts, cache_len=64)
+    want = [eng.generate(p[None], mn).tokens[0]
+            for p, (_, mn) in zip(prompts, jobs)]
+
+    rows, rec = [], {"config": {"arch": cfg.name, "page_size": PAGE_SIZE,
+                                "max_slots": MAX_SLOTS,
+                                "jobs": [list(j) for j in jobs],
+                                "smoke": smoke}}
+    last_mesh = None
+    for n_dev in DEVICE_COUNTS:
+        sched, rids, mesh, m = _mesh_column(cfg, params, opts, jobs, prompts,
+                                            pages, n_dev)
+        last_mesh = mesh
+        m["outputs_match_engine"] = all(
+            np.array_equal(sched.results[r], w) for r, w in zip(rids, want))
+        assert m["outputs_match_engine"], \
+            f"{n_dev}-device mesh diverged from the Engine oracle"
+        rec[f"mesh_{n_dev}dev"] = m
+        rows.append((f"sharded_serving/mesh_{n_dev}dev", m["wall_s"] * 1e6,
+                     f"tok/s={m['tokens_per_s']} mesh={m['mesh']} "
+                     f"shapes={m['compiled_shapes']}"))
+
+    ds, rids, m = _disaggregated_column(cfg, params, opts, jobs, prompts,
+                                        pages)
+    m["outputs_match_engine"] = all(
+        np.array_equal(ds.results[r], w) for r, w in zip(rids, want))
+    assert m["outputs_match_engine"], \
+        "disaggregated deployment diverged from the Engine oracle"
+    rec["disaggregated"] = m
+    rows.append(("sharded_serving/disaggregated", m["wall_s"] * 1e6,
+                 f"tok/s={m['tokens_per_s']} transfers={m['transfers']} "
+                 f"bytes={m['transferred_bytes']}"))
+
+    from benchmarks.common import env_section
+    rec.update(env_section(mesh=last_mesh, deployment="sharded+disaggregated"))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "sharded_serving_smoke.json" if smoke
+                       else "sharded_serving.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken workload (CI sharded-smoke step)")
+    args = ap.parse_args()
+    for name, us, derived in bench_sharded_serving(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

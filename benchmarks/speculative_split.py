@@ -163,6 +163,8 @@ def bench_speculative_split(smoke: bool = False):
         rows += r
         rec.update(m)
 
+    from benchmarks.common import env_section
+    rec.update(env_section())
     os.makedirs(OUT_DIR, exist_ok=True)
     out = os.path.join(OUT_DIR, "speculative_split_smoke.json" if smoke
                        else "speculative_split.json")

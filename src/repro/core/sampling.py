@@ -63,7 +63,12 @@ class SamplingParams:
     ``"batch"`` tolerates big chunks (throughput). ``speculate_k`` asks
     the backend to draft up to k tokens per step and verify them in one
     batched model call (:func:`speculative_verify`); 0 disables. Backends
-    without a draft source (the fused scan) ignore it."""
+    without a draft source (the fused scan) ignore it. ``logit_bias``
+    maps token ids to additive biases applied to the logits BEFORE
+    temperature/top-k/top-p — it reshapes the greedy argmax too (ban a
+    token with a large negative bias, force one with a large positive
+    bias), while reported logprobs stay raw-distribution. Applied by the
+    fused and paged backends; the split engine ignores it."""
 
     max_tokens: int = 16
     temperature: float = 0.0
@@ -77,6 +82,7 @@ class SamplingParams:
     prefix_len: int | None = None
     latency_hint: str = "balanced"
     speculate_k: int = 0
+    logit_bias: object = None
 
     def __post_init__(self):
         if self.max_tokens < 1:
@@ -99,6 +105,20 @@ class SamplingParams:
         if self.eos_id is not None:
             s |= {int(self.eos_id)}
         object.__setattr__(self, "_stop_set", s)
+        # logit_bias (a dict or (token, bias) pairs) normalizes to a SORTED
+        # tuple of (int, float) pairs — hashable (frozen dataclass) and
+        # order-independent (two dicts with the same entries compare equal)
+        lb = self.logit_bias
+        if lb:
+            items = lb.items() if hasattr(lb, "items") else lb
+            lb = tuple(sorted((int(t), float(b)) for t, b in items))
+            for tid, _ in lb:
+                if tid < 0:
+                    raise ValueError(
+                        f"logit_bias token ids must be >= 0, got {tid}")
+        else:
+            lb = ()
+        object.__setattr__(self, "logit_bias", lb)
 
     @property
     def greedy(self) -> bool:
@@ -149,6 +169,23 @@ def device_operands(params_list) -> tuple:
             jnp.asarray(o["top_k"]), jnp.asarray(o["top_p"]))
 
 
+def bias_rows(params_list, vocab_size: int) -> np.ndarray:
+    """Dense (R, V) f32 logit-bias operand: row r scatters
+    ``params_list[r].logit_bias`` into a zero vocab row. A DENSE row per
+    request (rather than a ragged id list) is what keeps the sampler at one
+    compiled shape — an all-zero row is the exact identity (``x + 0.0``),
+    so requests without a bias are untouched bit for bit. Host-side numpy;
+    callers move it to device inside their own jit boundaries."""
+    rows = np.zeros((len(params_list), vocab_size), np.float32)
+    for i, p in enumerate(params_list):
+        for tid, b in p.logit_bias:
+            if tid >= vocab_size:
+                raise ValueError(f"logit_bias token id {tid} out of range "
+                                 f"for vocab size {vocab_size}")
+            rows[i, tid] = b
+    return rows
+
+
 def truncate_at_stop(tokens, params: SamplingParams) -> tuple:
     """Truncate ``tokens`` at the first stop-set token (INCLUSIVE) →
     ``(tokens as a python int list, finish_reason)`` with reason ``"stop"``
@@ -196,14 +233,18 @@ def filtered_logits(logits, temperature, top_k, top_p):
     return jnp.where(z >= cutoff[:, None], z, NEG_INF)
 
 
-def sample_tokens(logits, keys, t, temperature, top_k, top_p):
+def sample_tokens(logits, keys, t, temperature, top_k, top_p, bias=None):
     """Sample one token per row, all rows in one compiled shape.
 
     ``logits`` (R, V) — any float dtype, promoted to f32; ``keys`` (R, 2)
     uint32 per-request PRNG keys; ``t`` (R,) int32 per-row generation index
     (folded into the row's key, so the draw depends on the row's own stream
     position, not on batch composition or a global step counter);
-    ``temperature``/``top_p`` (R,) f32; ``top_k`` (R,) int32, 0 = disabled.
+    ``temperature``/``top_p`` (R,) f32; ``top_k`` (R,) int32, 0 = disabled;
+    ``bias`` optional (R, V) f32 per-request logit bias
+    (:func:`bias_rows`), added BEFORE the greedy argmax and the
+    temperature/top-k/top-p filters — an all-zero row is the bitwise
+    identity.
 
     Rows with ``temperature <= 0`` or ``top_k == 1`` return the exact
     ``argmax`` (greedy lane). The rest are filtered to the intersection of
@@ -213,6 +254,8 @@ def sample_tokens(logits, keys, t, temperature, top_k, top_p):
     sort/softmax/categorical arithmetic at runtime entirely (same compiled
     shape, argmax-only cost). Returns (R,) int32."""
     logits = logits.astype(jnp.float32)
+    if bias is not None:
+        logits = logits + bias
     greedy_tok = jnp.argmax(logits, axis=-1)
     use_greedy = (temperature <= 0.0) | (top_k == 1)
 
@@ -239,12 +282,16 @@ def token_logprobs(logits, tokens):
                                axis=-1)[..., 0]
 
 
-def sample_tokens_with_logprobs(logits, keys, t, temperature, top_k, top_p):
+def sample_tokens_with_logprobs(logits, keys, t, temperature, top_k, top_p,
+                                bias=None):
     """:func:`sample_tokens` plus each drawn token's :func:`token_logprobs`
     value, in one jittable call — the serving backends fuse this with the
     model step so neither logits nor logprobs round-trip the host
-    separately. Returns ((R,) int32 tokens, (R,) f32 logprobs)."""
-    toks = sample_tokens(logits, keys, t, temperature, top_k, top_p)
+    separately. ``bias`` reshapes the draw only: logprobs stay RAW (the
+    unbiased distribution), so the value still reads as the model's own
+    confidence in the emitted token. Returns ((R,) int32 tokens, (R,) f32
+    logprobs)."""
+    toks = sample_tokens(logits, keys, t, temperature, top_k, top_p, bias)
     return toks, token_logprobs(logits, toks)
 
 
@@ -259,7 +306,7 @@ _RESIDUAL_TAG = 0x5EC0_0002
 
 
 def speculative_verify(draft, draft_len, logits, keys, t0,
-                       temperature, top_k, top_p):
+                       temperature, top_k, top_p, bias=None):
     """Draft-verify acceptance for speculative decoding, all rows in one
     compiled shape — the sampler half of the split-boundary speculation
     loop (``SplitEngine.generate(speculate_k=)`` and the paged scheduler's
@@ -298,8 +345,16 @@ def speculative_verify(draft, draft_len, logits, keys, t0,
     f32)``: row r emits ``out[r, :n_out[r]]`` (1 <= n_out <= draft_len+1 —
     the accepted prefix, then the correction/bonus token); ``logprobs`` are
     :func:`token_logprobs` under the raw VERIFY logits (never the draft
-    model's), valid wherever ``out`` is."""
-    logits = logits.astype(jnp.float32)
+    model's), valid wherever ``out`` is.
+
+    ``bias`` optional (R, V) f32 per-request logit bias, broadcast over the
+    K+1 verify positions and applied before the greedy argmax and the
+    filtered target distribution — the exact logits
+    :func:`sample_tokens` would bias at each position, so speculative and
+    non-speculative biased decoding stay equivalent. Logprobs stay raw
+    (unbiased)."""
+    raw = jnp.asarray(logits).astype(jnp.float32)
+    logits = raw if bias is None else raw + bias[:, None, :]
     r, k1, v = logits.shape
     kd = k1 - 1
     draft = jnp.asarray(draft, jnp.int32)
@@ -365,4 +420,4 @@ def speculative_verify(draft, draft_len, logits, keys, t0,
         jnp.all(use_greedy), lambda _: (tgt, g_m + 1), non_greedy, None)
     out = jnp.where(use_greedy[:, None], tgt, ng_out).astype(jnp.int32)
     n_out = jnp.where(use_greedy, g_m + 1, ng_n).astype(jnp.int32)
-    return out, n_out, token_logprobs(logits, out)
+    return out, n_out, token_logprobs(raw, out)

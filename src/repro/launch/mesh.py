@@ -26,6 +26,34 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(num_kv_heads: int, devices=None):
+    """The serving deployment's ``("kv", "model")`` mesh over ``devices``
+    (default: every visible device).
+
+    The ``kv`` axis shards the paged pool's page axis; the ``model`` axis
+    splits attention kv-head groups. ``model`` takes the largest divisor of
+    ``gcd(len(devices), num_kv_heads)`` that still leaves >= 2 devices for
+    the page axis (head splits only pay off once pages are already spread),
+    so 1 device -> (1, 1), 2 -> (2, 1), 4 with an even kv-head count ->
+    (2, 2). Built from an explicit device array (not ``jax.make_mesh``) so
+    sub-meshes over ``jax.devices()[:n]`` work inside one forced-N-device
+    test process."""
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    d = len(devices)
+    model = 1
+    for m in range(math.gcd(d, num_kv_heads), 0, -1):
+        if math.gcd(d, num_kv_heads) % m == 0 and d % m == 0 and d // m >= 2:
+            model = m
+            break
+    kv = d // model
+    return Mesh(np.asarray(devices).reshape(kv, model), ("kv", "model"))
+
+
 def data_axes(mesh) -> tuple:
     """Axes carrying data parallelism (the 'pod' axis joins by default)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -459,6 +459,26 @@ def quantized_decode_attention(q, cache: KVCache, spec, q_positions, pos, *,
                              q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
+def _head_shard(head_axis, head_shards: int, kh: int):
+    """This shard's kv-head slice ``(offset, kh_local)`` under the
+    ``RuntimeOpts.head_axis`` split, or None to run the full head set.
+    Only meaningful inside a ``shard_map`` that binds ``head_axis``; the
+    split must divide the kv-head count evenly (``sharded_step_fns``
+    guarantees it)."""
+    if head_axis is None or head_shards <= 1 or kh % head_shards:
+        return None
+    kh_loc = kh // head_shards
+    return jax.lax.axis_index(head_axis) * kh_loc, kh_loc
+
+
+def _slice_cache_heads(cache: PagedKVCache, off, kh_loc: int) -> PagedKVCache:
+    """Slice the pool leaves' kv-head axis (axis 1 of the per-block
+    (P, K, page[, hd]) leaves) down to one shard's head group."""
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, off, kh_loc, axis=1)
+    return PagedKVCache(sl(cache.k), sl(cache.v), sl(cache.k_scale),
+                        sl(cache.v_scale), cache.pos, cache.block_table)
+
+
 def _gather_dense_kv(cache: PagedKVCache):
     """Gather a paged cache dense via its block table and dequantize:
     (k, v) (R, S_pool, K, hd) f32 token-major + kv_pos (R, S_pool)."""
@@ -476,7 +496,8 @@ def _gather_dense_kv(cache: PagedKVCache):
 
 def paged_prefill_attention(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
                             q_positions, *, q_chunk=1024, kv_chunk=1024,
-                            use_kernel: bool = True):
+                            use_kernel: bool = True, head_axis=None,
+                            head_shards: int = 1):
     """Prefill attention THROUGH the paged pool — the shared-prefix /
     chunked-prefill entry.
 
@@ -511,10 +532,18 @@ def paged_prefill_attention(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
         b, s, h, hd = q.shape
         kh = cache.k.shape[1]
         qk = q.reshape(b, s, kh, h // kh, hd).transpose(0, 2, 1, 3, 4)
+        kf, vf = jnp.swapaxes(k_fresh, 1, 2), jnp.swapaxes(v_fresh, 1, 2)
+        shard = _head_shard(head_axis, head_shards, kh)
+        if shard is not None:  # this shard walks the pages with its heads
+            off, kh_loc = shard
+            dyn = lambda a: jax.lax.dynamic_slice_in_dim(a, off, kh_loc, 1)
+            qk, kf, vf = dyn(qk), dyn(kf), dyn(vf)
+            cache = _slice_cache_heads(cache, off, kh_loc)
         out = _kernel(qk, cache.k, cache.k_scale, cache.v, cache.v_scale,
                       cache.pos, cache.block_table,
-                      jnp.asarray(q_positions, jnp.int32),
-                      jnp.swapaxes(k_fresh, 1, 2), jnp.swapaxes(v_fresh, 1, 2))
+                      jnp.asarray(q_positions, jnp.int32), kf, vf)
+        if shard is not None:  # exact tiled reassembly — no reduction
+            out = jax.lax.all_gather(out, head_axis, axis=1, tiled=True)
         return out.transpose(0, 2, 1, 3, 4).reshape(b, s, h, hd).astype(q.dtype)
     from repro.kernels.paged_prefill_attention import first_call_position
 
@@ -531,7 +560,8 @@ def paged_prefill_attention(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
 
 
 def paged_decode_attention_layer(q, cache: PagedKVCache, spec, q_positions, *,
-                                 q_chunk=1024, kv_chunk=1024):
+                                 q_chunk=1024, kv_chunk=1024, head_axis=None,
+                                 head_shards: int = 1):
     """Decode-time attention through the PAGED pool.
 
     Kernel-eligible layers — single-token query, no logit softcap — walk
@@ -550,9 +580,16 @@ def paged_decode_attention_layer(q, cache: PagedKVCache, spec, q_positions, *,
         from repro.kernels.ops import paged_decode_attention
 
         qh = q[:, 0].reshape(b, kh, h // kh, hd)
+        shard = _head_shard(head_axis, head_shards, kh)
+        if shard is not None:  # this shard walks the pages with its heads
+            off, kh_loc = shard
+            qh = jax.lax.dynamic_slice_in_dim(qh, off, kh_loc, 1)
+            cache = _slice_cache_heads(cache, off, kh_loc)
         out = paged_decode_attention(qh, cache.k, cache.k_scale, cache.v,
                                      cache.v_scale, cache.pos,
                                      cache.block_table, q_pos)
+        if shard is not None:  # exact tiled reassembly — no reduction
+            out = jax.lax.all_gather(out, head_axis, axis=1, tiled=True)
         return out.reshape(b, 1, h, hd).astype(q.dtype)
     k, v, kv_pos = _gather_dense_kv(cache)
     return chunked_attention(q, k, v, q_positions, kv_pos, causal=True,
@@ -563,7 +600,8 @@ def paged_decode_attention_layer(q, cache: PagedKVCache, spec, q_positions, *,
 
 def varlen_attention_layer(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
                            q_positions, token_slots, *,
-                           use_kernel: bool = True):
+                           use_kernel: bool = True, head_axis=None,
+                           head_shards: int = 1):
     """Token-packed VARLEN attention through the pool — the packed tick's
     entry. ONE flat batch (batch dim 1) whose tokens span many requests:
     q (1, T, H, hd), per-token ``q_positions``/``token_slots`` (1, T), the
@@ -588,6 +626,12 @@ def varlen_attention_layer(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
     vf = jnp.swapaxes(v_fresh.reshape(t, kh, hd), 0, 1)
     qp = jnp.asarray(q_positions, jnp.int32).reshape(-1)
     sl = jnp.asarray(token_slots, jnp.int32).reshape(-1)
+    shard = _head_shard(head_axis, head_shards, kh)
+    if shard is not None:  # this shard walks the pages with its heads
+        off, kh_loc = shard
+        dyn = lambda a: jax.lax.dynamic_slice_in_dim(a, off, kh_loc, 0)
+        qk, kf, vf = dyn(qk), dyn(kf), dyn(vf)
+        cache = _slice_cache_heads(cache, off, kh_loc)
     if use_kernel:
         from repro.kernels.ops import varlen_attention as _kernel
 
@@ -601,6 +645,8 @@ def varlen_attention_layer(q, cache: PagedKVCache, k_fresh, v_fresh, spec,
         out = varlen_attention_ref(qk, cache.k, cache.k_scale, cache.v,
                                    cache.v_scale, cache.pos,
                                    cache.block_table, qp, sl, start, kf, vf)
+    if shard is not None:  # exact tiled reassembly — no reduction
+        out = jax.lax.all_gather(out, head_axis, axis=0, tiled=True)
     return out.transpose(1, 0, 2, 3).reshape(b, t, h, hd).astype(q.dtype)
 
 
@@ -629,7 +675,8 @@ def init_attention_params(key, d_model: int, num_heads: int, num_kv_heads: int,
 def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | None,
                     pos, q_positions, q_chunk=1024, kv_chunk=1024,
                     decode: bool = False, attend_cache: bool = False,
-                    prefill_kernel: bool = True, token_slots=None):
+                    prefill_kernel: bool = True, token_slots=None,
+                    quant_fresh=None, head_axis=None, head_shards: int = 1):
     """One attention layer.
 
     ``rope_cs``: (cos, sin) tables for the query positions, or None.
@@ -643,7 +690,16 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
     :func:`paged_prefill_attention`), and ``token_slots`` on a paged cache,
     which routes the token-packed VARLEN path (per-token block-table rows
     for a flat mixed prefill/decode batch, see
-    :func:`varlen_attention_layer`). Returns (output, new_cache)."""
+    :func:`varlen_attention_layer`). Returns (output, new_cache).
+
+    ``quant_fresh`` (B, S) bool (varlen route only): rows whose fresh k/v
+    are attended through the int8 quantize→dequantize round trip — the
+    exact values ``paged_cache_update`` stores, so a packed decode token
+    attends its OWN key identically to a sequential decode step reading it
+    back from the pool. The cache write always uses the original f32 k/v
+    (re-quantizing a dequantized tensor is not code-stable).
+    ``head_axis``/``head_shards``: see ``RuntimeOpts`` — split the paged
+    kernels' kv-head axis across a shard_map mesh axis."""
     b, s, d = x.shape
     h, kh, hd = spec.num_heads, spec.num_kv_heads, spec.head_dim
     q = (x @ params["wq"]).reshape(b, s, h, hd)
@@ -666,13 +722,27 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
         else:
             new_cache = cache_update(cache, k, v, pos, spec.sliding_window)
     if token_slots is not None and isinstance(new_cache, PagedKVCache):
-        out = varlen_attention_layer(q, new_cache, k, v, spec, q_positions,
-                                     token_slots, use_kernel=prefill_kernel)
+        k_att, v_att = k, v
+        if quant_fresh is not None:
+            # int8 round trip for the masked rows: bit-identical to what
+            # paged_cache_update just stored for them, so attending these
+            # "fresh" keys equals reading them back from the pool
+            kc, ks = _quantize_kv(k)
+            vc, vs = _quantize_kv(v)
+            m = quant_fresh[..., None, None]  # (B, S, 1, 1)
+            k_att = jnp.where(m, kc.astype(jnp.float32) * ks, k).astype(k.dtype)
+            v_att = jnp.where(m, vc.astype(jnp.float32) * vs, v).astype(v.dtype)
+        out = varlen_attention_layer(q, new_cache, k_att, v_att, spec,
+                                     q_positions, token_slots,
+                                     use_kernel=prefill_kernel,
+                                     head_axis=head_axis,
+                                     head_shards=head_shards)
     elif cache is not None and decode:
         if isinstance(new_cache, PagedKVCache):
             out = paged_decode_attention_layer(
                 q, new_cache, spec, q_positions,
-                q_chunk=q_chunk, kv_chunk=kv_chunk)
+                q_chunk=q_chunk, kv_chunk=kv_chunk,
+                head_axis=head_axis, head_shards=head_shards)
         elif new_cache.quantized:
             out = quantized_decode_attention(
                 q, new_cache, spec, q_positions, pos,
@@ -685,7 +755,9 @@ def attention_layer(params, x: jax.Array, spec, *, rope_cs, cache: KVCache | Non
     elif attend_cache and isinstance(new_cache, PagedKVCache):
         out = paged_prefill_attention(q, new_cache, k, v, spec, q_positions,
                                       q_chunk=q_chunk, kv_chunk=kv_chunk,
-                                      use_kernel=prefill_kernel)
+                                      use_kernel=prefill_kernel,
+                                      head_axis=head_axis,
+                                      head_shards=head_shards)
     else:
         out = chunked_attention(
             q, k, v, q_positions, q_positions,

@@ -58,6 +58,14 @@ class RuntimeOpts:
     # to gathering the pool dense per layer — the pre-kernel baseline the
     # chunked_prefill benchmark measures against
     paged_prefill_kernel: bool = True
+    # split the paged kernels' kv-head axis over a named mesh axis: each
+    # shard walks the pages with its own head group and an exact tiled
+    # all_gather reassembles the outputs (no psum — reduction order, and
+    # therefore greedy argmaxes, stay bit-identical to single-device).
+    # Only meaningful inside shard_map; set by sharded_step_fns, never by
+    # callers directly. head_shards must divide num_kv_heads.
+    head_axis: str | None = None
+    head_shards: int = 1
 
 
 # ---------------------------------------------------------------------------
@@ -201,7 +209,7 @@ def apply_head(cfg: ArchConfig, params, x):
 
 def _apply_layer(cfg, ls: LayerSpec, p, x, *, rope_cs, q_positions, cache, pos,
                  opts: RuntimeOpts, decode: bool, attend_cache: bool = False,
-                 token_slots=None):
+                 token_slots=None, quant_fresh=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     aux = jnp.zeros((), jnp.float32)
     if isinstance(ls.mixer, AttnSpec):
@@ -209,7 +217,9 @@ def _apply_layer(cfg, ls: LayerSpec, p, x, *, rope_cs, q_positions, cache, pos,
             p["mixer"], h, ls.mixer, rope_cs=rope_cs, cache=cache, pos=pos,
             q_positions=q_positions, q_chunk=opts.q_chunk, kv_chunk=opts.kv_chunk,
             decode=decode, attend_cache=attend_cache,
-            prefill_kernel=opts.paged_prefill_kernel, token_slots=token_slots)
+            prefill_kernel=opts.paged_prefill_kernel, token_slots=token_slots,
+            quant_fresh=quant_fresh, head_axis=opts.head_axis,
+            head_shards=opts.head_shards)
     else:
         conv_state, ssm_state = cache if cache is not None else (None, None)
         out, new_cache = ssm_layer(p["mixer"], h, ls.mixer,
@@ -264,7 +274,8 @@ def _apply_blocks_train(cfg, blocks, x, *, rope_cs, q_positions, opts: RuntimeOp
 
 def _apply_blocks_cached(cfg, blocks, x, caches, *, rope_cs, q_positions, pos,
                          opts: RuntimeOpts, decode: bool,
-                         attend_cache: bool = False, token_slots=None):
+                         attend_cache: bool = False, token_slots=None,
+                         quant_fresh=None):
     """Caches ride in the scan CARRY (sliced per block by index, written back
     with dynamic_update_slice) rather than as xs→ys: carries can be buffer-
     aliased/donated, so a serve step updates the multi-GB cache in place —
@@ -282,7 +293,8 @@ def _apply_blocks_cached(cfg, blocks, x, caches, *, rope_cs, q_positions, pos,
                                     rope_cs=rope_cs, q_positions=q_positions,
                                     cache=cache_i, pos=pos, opts=opts,
                                     decode=decode, attend_cache=attend_cache,
-                                    token_slots=token_slots)
+                                    token_slots=token_slots,
+                                    quant_fresh=quant_fresh)
             new_caches.append(jax.tree_util.tree_map(
                 lambda full, sl: jax.lax.dynamic_update_slice_in_dim(
                     full, sl[None].astype(full.dtype), i, axis=0),
@@ -455,7 +467,8 @@ def paged_decode_step(params, cfg: ArchConfig, tokens, caches, pos,
 
 
 def packed_step(params, cfg: ArchConfig, tokens, caches, positions, slots,
-                logit_rows, opts: RuntimeOpts = RuntimeOpts()):
+                logit_rows, opts: RuntimeOpts = RuntimeOpts(),
+                quant_fresh=None):
     """ONE token-packed step over the paged pool: the whole tick — every
     decoding slot's next token AND up-to-budget prefill-chunk tokens — as a
     single flat batch.
@@ -468,7 +481,18 @@ def packed_step(params, cfg: ArchConfig, tokens, caches, positions, slots,
     ``logit_rows`` (R,) names the buffer row holding each slot's LAST token
     (any row for absent slots — their logits are garbage the scheduler
     never samples), so logits keep the ``(R, V)`` shape the per-slot
-    sampling operand lanes expect. Returns (logits (R, V), caches)."""
+    sampling operand lanes expect.
+
+    ``quant_fresh`` (1, T) bool marks rows whose FRESH self-keys must be
+    attended through the int8 quantize→dequantize round trip instead of at
+    full precision — the scheduler sets it on its decode rows, whose one
+    fresh key IS their own token: a sequential decode step would read that
+    key back from the pool's codes, so attending it at f32 here is the one
+    value-level divergence packed mode had from ``paged_decode_step`` (and
+    from ``Engine.generate``). With the mask on, packed greedy streams are
+    bit-identical to the per-request oracle; prefill rows keep full-
+    precision fresh keys exactly like the chunked prefill path. Returns
+    (logits (R, V), caches)."""
     positions = jnp.asarray(positions, jnp.int32)
     slots = jnp.asarray(slots, jnp.int32)
     x = embed_inputs(cfg, params, tokens, None, jnp.maximum(positions, 0))
@@ -476,7 +500,8 @@ def packed_step(params, cfg: ArchConfig, tokens, caches, positions, slots,
     x, caches = _apply_blocks_cached(cfg, params["blocks"], x, caches,
                                      rope_cs=rope_cs, q_positions=positions,
                                      pos=jnp.int32(0), opts=opts, decode=False,
-                                     token_slots=slots)
+                                     token_slots=slots,
+                                     quant_fresh=quant_fresh)
     xl = jnp.take(x[0], jnp.asarray(logit_rows, jnp.int32), axis=0)  # (R, D)
     logits = apply_head(cfg, params, xl[None])
     return logits[0], caches
@@ -506,3 +531,120 @@ def paged_verify_step(params, cfg: ArchConfig, tokens, caches, positions,
                                      rope_cs=rope_cs, q_positions=positions,
                                      pos=jnp.int32(0), opts=opts, decode=True)
     return apply_head(cfg, params, x), caches
+
+
+# --------------------------------------------------------------- sharded
+
+
+def sharded_step_fns(cfg: ArchConfig, opts: RuntimeOpts, mesh) -> dict:
+    """``shard_map``-lowered drop-in versions of the five paged step
+    functions over a ``("kv", "model")`` mesh (``repro.launch.mesh.
+    make_serving_mesh``). Returns ``{"prefill", "prefill_shared", "decode",
+    "packed", "verify"}`` — same signatures as the base entry points with
+    ``cfg``/``opts`` closed over, so the scheduler's jitted tick lambdas
+    swap them in unchanged (one jitted tick per mode is preserved).
+
+    Execution model, chosen for exactness (the repo's bit-identity bar):
+
+      * pool PAGE leaves arrive sharded ``P(None, "kv")`` (each device
+        STORES 1/kv of the pool — the memory-constrained axis); the body
+        starts with a tiled ``all_gather`` over "kv" so every device walks
+        the full page set with the block tables, then slices its own page
+        shard back out of the updated pool. Gather/slice are exact — page
+        values are moved, never reduced.
+      * attention kv-heads are split over "model" via
+        ``RuntimeOpts.head_axis``/``head_shards`` (the layers slice their
+        head group, walk the pages with it, and reassemble with an exact
+        tiled ``all_gather`` — no psum, so no reduction-order drift).
+      * everything dense (embeddings, MLPs, lm head) runs replicated;
+        logits come out ``P()`` and per-slot sampling stays OUTSIDE the
+        shard_map, inside the scheduler's same jit.
+
+    Greedy token streams are therefore bit-identical to the single-device
+    step functions (asserted by ``tests/test_sharded_serving.py`` on
+    forced CPU device counts with the Pallas kernels in interpret mode)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    page = PartitionSpec(None, "kv")
+    repl = PartitionSpec()
+    cache_spec = tuple(L.PagedKVCache(page, page, page, page, page, repl)
+                       for _ in cfg.pattern)
+    ksize, msize = mesh.shape["kv"], mesh.shape["model"]
+    kh = cfg.pattern[0].mixer.num_kv_heads
+    inner = opts
+    if msize > 1:
+        if kh % msize != 0:
+            raise ValueError(
+                f"mesh 'model' axis {msize} must divide num_kv_heads {kh} "
+                f"(make_serving_mesh only builds such meshes)")
+        inner = dataclasses.replace(opts, head_axis="model",
+                                    head_shards=msize)
+
+    def _gather(caches):
+        g = lambda a: jax.lax.all_gather(a, "kv", axis=1, tiled=True)
+        return tuple(L.PagedKVCache(g(c.k), g(c.v), g(c.k_scale),
+                                    g(c.v_scale), g(c.pos), c.block_table)
+                     for c in caches)
+
+    def _scatter(caches):
+        i = jax.lax.axis_index("kv")
+
+        def s(a):
+            local = a.shape[1] // ksize
+            return jax.lax.dynamic_slice_in_dim(a, i * local, local, axis=1)
+
+        return tuple(L.PagedKVCache(s(c.k), s(c.v), s(c.k_scale),
+                                    s(c.v_scale), s(c.pos), c.block_table)
+                     for c in caches)
+
+    def _wrap(step, n_repl: int):
+        """shard_map a step whose args are (params, *n_repl replicated
+        operands, caches-last-moved-to-front)…"""
+
+        def body(params, caches, *args):
+            logits, out = step(params, _gather(caches), *args)
+            return logits, _scatter(out)
+
+        sm = shard_map(body, mesh=mesh,
+                       in_specs=(repl, cache_spec) + (repl,) * n_repl,
+                       out_specs=(repl, cache_spec), check_rep=False)
+
+        def fn(params, caches, *args):
+            return sm(params, caches, *args)
+
+        return fn
+
+    prefill = _wrap(
+        lambda p, c, tokens, positions: paged_prefill(
+            p, cfg, tokens, c, positions, inner), 2)
+    prefill_shared = _wrap(
+        lambda p, c, tokens, positions: paged_prefill_shared(
+            p, cfg, tokens, c, positions, inner), 2)
+    decode = _wrap(
+        lambda p, c, tokens, pos: paged_decode_step(
+            p, cfg, tokens, c, pos, inner), 2)
+    packed = _wrap(
+        lambda p, c, tokens, positions, slots, logit_rows, quant_fresh:
+        packed_step(p, cfg, tokens, c, positions, slots, logit_rows, inner,
+                    quant_fresh), 5)
+    verify = _wrap(
+        lambda p, c, tokens, positions: paged_verify_step(
+            p, cfg, tokens, c, positions, inner), 2)
+
+    return {
+        "prefill": lambda params, tokens, caches, positions:
+            prefill(params, caches, tokens, positions),
+        "prefill_shared": lambda params, tokens, caches, positions:
+            prefill_shared(params, caches, tokens, positions),
+        "decode": lambda params, tokens, caches, pos:
+            decode(params, caches, tokens, pos),
+        "packed": lambda params, tokens, caches, positions, slots,
+            logit_rows, quant_fresh:
+            packed(params, caches, tokens, positions, slots,
+                   jnp.asarray(logit_rows, jnp.int32),
+                   (jnp.zeros(jnp.asarray(tokens).shape, bool)
+                    if quant_fresh is None else quant_fresh)),
+        "verify": lambda params, tokens, caches, positions:
+            verify(params, caches, tokens, positions),
+    }

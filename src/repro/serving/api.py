@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.sampling import SamplingParams, truncate_at_stop
 from repro.models.transformer import RuntimeOpts
 from repro.serving.engine import Engine
+from repro.serving.page_transport import DisaggregatedScheduler
 from repro.serving.scheduler import Scheduler
 from repro.serving.split_engine import SplitEngine
 
@@ -384,14 +385,54 @@ class PagedBackend(_RequestBook):
     ``SamplingParams(speculate_k=)`` may lower its burst below the
     scheduler-wide width. The fused backend has no incremental tick to
     amortize, so it ignores ``speculate_k`` (documented on
-    ``SamplingParams``)."""
+    ``SamplingParams``).
+
+    ``deployment`` picks the serving topology — greedy token streams are
+    bit-identical across all three (the sharded/disaggregated acceptance
+    bar, pinned by ``tests/test_sharded_serving.py``):
+
+    * ``"fused"`` (default) — one scheduler, single-device step fns.
+    * ``"sharded"`` — one scheduler whose ticks are ``shard_map``-lowered
+      over a device mesh (pool pages sharded over the ``"kv"`` axis,
+      attention heads over ``"model"``). Pass ``mesh=`` to pin a
+      ``jax.sharding.Mesh``; omitted, ``launch.mesh.make_serving_mesh``
+      builds one over every visible device.
+    * ``"disaggregated"`` — a prefill replica and a decode replica with
+      separate pools, joined by the page-stream transport
+      (:class:`~repro.serving.page_transport.DisaggregatedScheduler`);
+      ``prefill_kwargs=``/``decode_kwargs=`` tune the sides."""
 
     def __init__(self, cfg, params, opts: RuntimeOpts = RuntimeOpts(),
-                 *, telemetry=None, **scheduler_kwargs):
+                 *, telemetry=None, deployment: str = "fused",
+                 **scheduler_kwargs):
         super().__init__()
         self.telemetry = telemetry
-        self.scheduler = Scheduler(cfg, params, opts, telemetry=telemetry,
-                                   **scheduler_kwargs)
+        self.deployment = deployment
+        if deployment == "fused":
+            if "mesh" in scheduler_kwargs and \
+                    scheduler_kwargs["mesh"] is not None:
+                raise ValueError(
+                    "mesh= requires deployment='sharded' (a fused "
+                    "deployment never lowers through shard_map)")
+            scheduler_kwargs.pop("mesh", None)
+            self.scheduler = Scheduler(cfg, params, opts,
+                                       telemetry=telemetry,
+                                       **scheduler_kwargs)
+        elif deployment == "sharded":
+            mesh = scheduler_kwargs.pop("mesh", None)
+            if mesh is None:
+                from repro.launch.mesh import make_serving_mesh
+                mesh = make_serving_mesh(cfg.pattern[0].mixer.num_kv_heads)
+            self.scheduler = Scheduler(cfg, params, opts,
+                                       telemetry=telemetry, mesh=mesh,
+                                       **scheduler_kwargs)
+        elif deployment == "disaggregated":
+            self.scheduler = DisaggregatedScheduler(
+                cfg, params, opts, telemetry=telemetry, **scheduler_kwargs)
+        else:
+            raise ValueError(
+                f"unknown deployment {deployment!r}: expected 'fused', "
+                f"'sharded' or 'disaggregated'")
 
     def submit(self, req: GenerationRequest) -> int:
         return self._track(req, self.scheduler.submit(
@@ -402,6 +443,9 @@ class PagedBackend(_RequestBook):
         return self.scheduler.pending or bool(self._pending_events)
 
     def _release_dicts(self) -> tuple:
+        rd = getattr(self.scheduler, "_release_dicts", None)
+        if rd is not None:  # disaggregated facade: merged-copy properties
+            return rd()
         return (self.scheduler.results, self.scheduler.finish_reasons)
 
     def step(self) -> list:
@@ -460,7 +504,9 @@ class LLMServer:
     (extra keyword arguments reach that backend's constructor — e.g.
     ``num_pages=``/``max_slots=``/``lazy_growth=`` for paged, ``opsc=``
     and channel/deadline knobs for split, ``cache_len=`` for fused) or an
-    already-built :class:`ServingBackend`.
+    already-built :class:`ServingBackend`. The paged backend additionally
+    takes ``deployment="fused"|"sharded"|"disaggregated"`` — same API,
+    same greedy streams, different topology (see :class:`PagedBackend`).
 
     ``telemetry`` threads one :class:`~repro.serving.telemetry.Tracer`
     through the chosen backend (``True`` builds a fresh one, exposed as

@@ -22,8 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.sampling import (broadcast_params, device_operands,
-                                 sample_tokens, token_logprobs)
+from repro.core.sampling import (bias_rows, broadcast_params,
+                                 device_operands, sample_tokens,
+                                 token_logprobs)
 from repro.models.transformer import RuntimeOpts, decode_step, prefill
 
 
@@ -147,7 +148,11 @@ class Engine:
         index (the exact stream the paged scheduler draws for the same
         seed — fused/paged sampling parity). ``greedy=True`` compiles the
         pure-argmax scan (identical tokens to :meth:`generate_fn`
-        greedy, bit for bit)."""
+        greedy, bit for bit). The trailing ``bias`` operand is ``None``
+        for bias-free batches (jit retraces on the pytree-structure
+        change, so the default workload's compiled program has no extra
+        operand at all); with a (B, V) bias row it shifts the logits
+        before the argmax / sampler — logprobs stay raw."""
         assert max_new_tokens >= 1, "the fused loop samples at least one token"
         key = ("req", int(max_new_tokens), bool(greedy), int(self.cache_len),
                self.opts)
@@ -156,10 +161,13 @@ class Engine:
         cfg, opts, cache_len = self.cfg, self.opts, self.cache_len
         max_new = int(max_new_tokens)
 
-        def fn(params, tokens, patches, keys, temperature, top_k, top_p):
+        def fn(params, tokens, patches, keys, temperature, top_k, top_p,
+               bias):
             b = tokens.shape[0]
 
             def sample(logits, t):
+                if bias is not None:
+                    logits = logits + bias
                 if greedy:
                     return jnp.argmax(logits, axis=-1)
                 return sample_tokens(logits, keys,
@@ -193,8 +201,11 @@ class Engine:
         bucket = min(1 << (max_new - 1).bit_length(), self.cache_len - s)
         fn = self.request_fn(bucket, greedy=all(p.greedy for p in sampling))
         keys, temp, tk, tp = device_operands(sampling)
+        bias = None
+        if any(p.logit_bias for p in sampling):
+            bias = jnp.asarray(bias_rows(sampling, self.cfg.vocab_size))
         t0 = self.telemetry.now() if self.telemetry is not None else 0.0
-        out, lps = fn(self.params, tokens, None, keys, temp, tk, tp)
+        out, lps = fn(self.params, tokens, None, keys, temp, tk, tp, bias)
         if self.telemetry is not None:
             self._span(t0, batch=b, prompt_len=s, max_new=max_new, out=out)
         return GenerationResult(np.asarray(out[:, : s + max_new]), max_new,

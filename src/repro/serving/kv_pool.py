@@ -127,17 +127,32 @@ class PagedKVPool:
     writes inside fixed pages are a follow-on); ``num_blocks`` overrides
     ``cfg.num_blocks`` so a split engine can pool just its cloud segment.
 
+    ``mesh=`` (a ``("kv", "model")`` mesh from ``repro.launch.mesh.
+    make_serving_mesh``) turns on sharded mode: every pool leaf's PAGE axis
+    is laid out over the mesh's ``kv`` axis via ``NamedSharding`` (the page
+    count is rounded up to divide evenly), block tables stay replicated,
+    and the host-side allocator / refcount / CoW / truncate logic is
+    byte-for-byte the single-device logic — sharding only changes WHERE
+    pages live, never which request owns them.
+
     Units note (applies to every method): ``*_tokens``/``*_len`` arguments
     count TOKENS, ``pages_*``/``*_pages`` count fixed-size PAGES, and
     ``*_bytes`` are device bytes across every covered layer."""
 
     def __init__(self, cfg: ArchConfig, *, num_pages: int,
                  page_size: int = DEFAULT_PAGE_SIZE, max_requests: int,
-                 max_seq_len: int | None = None, num_blocks: int | None = None):
+                 max_seq_len: int | None = None, num_blocks: int | None = None,
+                 mesh=None):
         if page_size <= 0:
             raise ValueError(f"page_size must be positive, got {page_size}")
         if num_pages < 2:
             raise ValueError("num_pages must be >= 2 (page 0 is reserved)")
+        if mesh is not None:
+            # sharded mode: the PAGE axis (axis 1 of every leaf) is split
+            # over the mesh's "kv" axis; round the page count up so it
+            # divides evenly (extra pages just enlarge the free list)
+            kv_size = mesh.shape["kv"]
+            num_pages = -(-num_pages // kv_size) * kv_size
         self.specs = []
         for ls in cfg.pattern:
             m = ls.mixer
@@ -178,6 +193,21 @@ class PagedKVPool:
                                       jnp.int32),
             )
             for _ in cfg.pattern)
+
+        # sharded mode: pin each leaf's placement — pages split over the
+        # "kv" mesh axis, block tables replicated. The allocator / refcount
+        # / CoW / truncate logic below is untouched: host-driven `.at`
+        # updates may produce unplaced results, so :meth:`device_caches`
+        # re-applies these shardings before every jitted step (a no-op when
+        # the array is already placed correctly).
+        self.mesh = mesh
+        self._page_sharding = self._repl_sharding = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            self._page_sharding = NamedSharding(mesh, P(None, "kv"))
+            self._repl_sharding = NamedSharding(mesh, P())
+            self._caches = tuple(self._place(c) for c in self._caches)
 
         # host allocator state: LIFO free list (most-recently-freed page is
         # reused first — keeps the hot pages hot), trash page 0 excluded,
@@ -565,6 +595,16 @@ class PagedKVPool:
         self.swap_bytes -= self.snapshot_bytes(snapshot)
         assert self.swap_bytes >= 0, "snapshot discarded twice"
 
+    def adopt_snapshot(self, snapshot: dict) -> None:
+        """Take accounting ownership of a snapshot EXPORTED FROM ANOTHER
+        pool (the disaggregated prefill→decode page stream,
+        ``serving.page_transport.PageStreamTransport``): charges this
+        pool's ``swap_bytes`` so the eventual :meth:`restore_slot`
+        decrement balances. The exporting pool must release its own side
+        with :meth:`discard_snapshot` — exactly one pool owns a snapshot's
+        bytes at any time."""
+        self.swap_bytes += self.snapshot_bytes(snapshot)
+
     def restore_slot(self, snapshot: dict,
                      reserve_tokens: int | None = None) -> int:
         """Re-admit a preempted request from an :meth:`export_slot`
@@ -598,15 +638,37 @@ class PagedKVPool:
 
     # ------------------------------------------------------- device plumbing
 
+    def _place(self, c: PagedKVCache) -> PagedKVCache:
+        """Re-apply the mesh shardings to one pattern position's leaves
+        (sharded mode only): page-axis leaves onto ``P(None, "kv")``, the
+        block table replicated. ``jax.device_put`` is a no-op when the
+        array already sits where it should, so calling this after every
+        host-driven ``.at`` mutation costs nothing in steady state."""
+        import jax
+
+        return dataclasses.replace(
+            c,
+            k=jax.device_put(c.k, self._page_sharding),
+            v=jax.device_put(c.v, self._page_sharding),
+            k_scale=jax.device_put(c.k_scale, self._page_sharding),
+            v_scale=jax.device_put(c.v_scale, self._page_sharding),
+            pos=jax.device_put(c.pos, self._page_sharding),
+            block_table=jax.device_put(c.block_table, self._repl_sharding))
+
     def device_caches(self, rows=None) -> tuple:
         """The pool pytree with the CURRENT block tables installed —
         ``rows`` selects a sub-batch (e.g. the freshly admitted requests for
-        a ragged prefill); default is every slot row."""
+        a ragged prefill); default is every slot row. In sharded mode every
+        leaf is (re)placed onto the mesh first, so the jitted step always
+        sees page-sharded pool leaves + replicated tables."""
         bt = self.block_tables if rows is None else self.block_tables[rows]
         bt = jnp.broadcast_to(jnp.asarray(bt, jnp.int32)[None],
                               (self.nb,) + bt.shape)
-        return tuple(dataclasses.replace(c, block_table=bt)
-                     for c in self._caches)
+        caches = tuple(dataclasses.replace(c, block_table=bt)
+                       for c in self._caches)
+        if self.mesh is not None:
+            caches = tuple(self._place(c) for c in caches)
+        return caches
 
     def update_from(self, new_caches: tuple) -> None:
         """Adopt the pool arrays a jitted prefill/decode step returned (the

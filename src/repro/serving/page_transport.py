@@ -1,0 +1,328 @@
+"""One page-transport layer for every mover of paged-KV bytes.
+
+The serving stack grew three independent mechanisms that ship a request's
+KV state between memory domains, each with its own ad-hoc accounting:
+
+  * HOST SWAP — the scheduler's preempt/resume path
+    (``kv_pool.export_slot`` / ``restore_slot``): device pages → host
+    snapshot → device pages, bit-identical round trip.
+  * TAB-Q UPLINK — ``SplitEngine``'s edge→cloud activation payload
+    (TS + TAB-Q compressed hidden states; with ``paged_cloud_kv`` the
+    cloud side lands in a shared page pool).
+  * PAGE STREAM (new) — the disaggregated prefill→decode replica handoff
+    (DistServe/Splitwise-style): a ``PrefillWorker`` runs admission +
+    chunked prefill on its own pool and ships each finished request's
+    int8+scale pages layer-by-layer into a ``DecodeWorker``'s pool.
+
+:class:`PageTransport` unifies their observability: every concrete mover
+records each transfer as one telemetry span on the ``"transport"`` track
+(PR 7 ``Tracer`` — ``t0``/``t1``/``bytes``/``rid`` attributes, so
+transfer/compute overlap is visible in the Chrome trace) plus a
+per-transfer bytes histogram and running totals, and mirrors
+``bytes_moved``/``transfers`` on itself for tracer-less use. The VALUES
+moved are never touched — transport is accounting + copying, so every
+bit-identity guarantee of the underlying mechanism survives it.
+
+:class:`DisaggregatedScheduler` composes the workers into a drop-in
+``Scheduler`` facade (the ``deployment="disaggregated"`` knob of
+``serving.api.LLMServer``): one prefill replica, one decode replica, one
+:class:`PageStreamTransport` between them. Because the handoff rides the
+proven swap-export/restore machinery, a request's greedy stream is
+bit-identical to the single-scheduler (and ``Engine.generate``) stream —
+the first token is emitted by the prefill replica, every later token by
+the decode replica, with contiguous event indices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.kv_pool import PagedKVPool
+
+
+class PageTransport:
+    """Base mover: telemetry spans + bytes accounting for one transport
+    kind. Subclasses set ``kind`` and call :meth:`_record` once per
+    transfer; with ``telemetry=None`` every instrumented path is a strict
+    no-op and only the local counters update."""
+
+    kind = "transport"
+
+    def __init__(self, telemetry=None):
+        self.telemetry = telemetry
+        self.bytes_moved = 0  # total payload bytes across transfers
+        self.transfers = 0
+
+    def _record(self, name: str, t0: float, t1: float, nbytes: float,
+                rid: int | None = None, track: str = "transport",
+                **attrs) -> None:
+        """Account one transfer: a span (on the ``"transport"`` track
+        unless the mover claims a legacy lane) plus the per-kind bytes
+        histogram and running totals."""
+        self.bytes_moved += int(nbytes)
+        self.transfers += 1
+        tel = self.telemetry
+        if tel is None:
+            return
+        tel.add_span(name, t0, t1, track=track, rid=rid,
+                     bytes=int(nbytes), transport=self.kind, **attrs)
+        tel.metrics.count(f"transport.{self.kind}.transfers")
+        tel.metrics.count(f"transport.{self.kind}.total_bytes", int(nbytes))
+        tel.metrics.observe(f"transport.{self.kind}.bytes", float(nbytes))
+
+    def _now(self) -> float:
+        return self.telemetry.now() if self.telemetry is not None else 0.0
+
+
+class HostSwapTransport(PageTransport):
+    """The preempt/resume mover: device pages ⇄ host snapshot on ONE pool.
+    Wraps ``kv_pool.export_slot``/``restore_slot`` with the unified
+    accounting; span names stay ``"swap_out"``/``"swap_resume"`` on the
+    per-slot tracks (the PR 7 lifecycle shapes)."""
+
+    kind = "host_swap"
+
+    def swap_out(self, pool: PagedKVPool, slot: int, n_tokens: int,
+                 rid: int | None = None) -> dict:
+        t0 = self._now()
+        snapshot = pool.export_slot(slot, n_tokens=n_tokens)
+        self._record("swap_out", t0, self._now(),
+                     pool.snapshot_bytes(snapshot), rid=rid,
+                     track=f"slot{slot}")
+        return snapshot
+
+    def swap_in(self, pool: PagedKVPool, snapshot: dict,
+                reserve_tokens: int | None = None,
+                rid: int | None = None) -> int:
+        nbytes = pool.snapshot_bytes(snapshot)
+        t0 = self._now()
+        slot = pool.restore_slot(snapshot, reserve_tokens=reserve_tokens)
+        self._record("swap_resume", t0, self._now(), nbytes, rid=rid,
+                     track=f"slot{slot}")
+        return slot
+
+
+class TabqUplinkTransport(PageTransport):
+    """The split-computing edge→cloud mover: TS+TAB-Q activation payloads
+    (``SplitEngine``). The engine computes the payload itself (compression
+    is model code, not transport); this class owns the WIRE accounting —
+    it emits the legacy ``"uplink"`` event on the ``"split:uplink"`` track
+    (the shape ``tests/test_telemetry.py`` pins) plus the unified
+    transport span/histogram, with bits rounded up to whole bytes."""
+
+    kind = "tabq_uplink"
+
+    def uplink(self, bits: float, rid: int | None = None, **attrs) -> None:
+        t = self._now()
+        if self.telemetry is not None:
+            self.telemetry.event("uplink", track="split:uplink", rid=rid,
+                                 t=t, bits=bits, **attrs)
+        self._record("uplink", t, t, -(-bits // 8), rid=rid, **attrs)
+
+
+class PageStreamTransport(PageTransport):
+    """The NEW mover: stream one request's written int8+scale pages from a
+    prefill replica's pool into a decode replica's pool, LAYER BY LAYER
+    (one span per pattern position, so the Chrome trace shows each
+    layer's shipment and a pipelined implementation could overlap layer N's
+    wire time with layer N+1's prefill). The payload is the swap-snapshot
+    encoding — quantized codes, scales and position tags exactly as the
+    pool stores them — so the decode replica's restore is bit-identical by
+    the same argument as swap resume. Snapshot byte ownership moves
+    src → dst (``discard_snapshot``/``adopt_snapshot``)."""
+
+    kind = "page_stream"
+
+    def send(self, src_pool: PagedKVPool, dst_pool: PagedKVPool,
+             snapshot: dict, rid: int | None = None) -> dict:
+        if src_pool.page_size != dst_pool.page_size:
+            raise ValueError(
+                f"page stream needs matching page sizes: prefill pool has "
+                f"{src_pool.page_size}, decode pool {dst_pool.page_size}")
+        shipped = []
+        for layer, leaves in enumerate(snapshot["data"]):
+            t0 = self._now()
+            # the copy IS the wire: the receiver owns distinct buffers,
+            # never views into the sender's snapshot
+            moved = tuple(leaf.copy() for leaf in leaves)
+            self._record("page_stream", t0, self._now(),
+                         sum(leaf.nbytes for leaf in moved), rid=rid,
+                         layer=layer, tokens=snapshot["length"])
+            shipped.append(moved)
+        out = {"length": snapshot["length"], "data": tuple(shipped)}
+        src_pool.discard_snapshot(snapshot)
+        dst_pool.adopt_snapshot(out)
+        return out
+
+
+class PrefillWorker:
+    """The prefill replica: a full :class:`~repro.serving.scheduler.
+    Scheduler` that admits, prefills and emits each request's FIRST token,
+    then hands the request off. ``harvest()`` extracts every slot that has
+    finished its prompt (>= 1 generated token, not already finished) —
+    the extracted ``Request`` carries its generated tokens and the page
+    snapshot the transport ships."""
+
+    def __init__(self, scheduler):
+        self.scheduler = scheduler
+
+    def tick(self) -> None:
+        if self.scheduler.pending:
+            self.scheduler.step()
+
+    def harvest(self) -> list:
+        sched = self.scheduler
+        ready = [st.req.rid for st in sched.slots
+                 if st is not None and not st.prefilling and st.generated
+                 and not st.done]
+        return [sched.extract(rid) for rid in ready]
+
+
+class DecodeWorker:
+    """The decode replica: a full scheduler that never ``submit``s — it
+    only ``inject``s transported requests, restores their pages through
+    the ordinary swap-resume admission path, and decodes them to
+    completion."""
+
+    def __init__(self, scheduler):
+        self.scheduler = scheduler
+
+    def accept(self, req) -> None:
+        self.scheduler.inject(req)
+
+    def tick(self) -> None:
+        if self.scheduler.pending:
+            self.scheduler.step()
+
+
+class DisaggregatedScheduler:
+    """DistServe/Splitwise-style disaggregated serving behind the ONE
+    scheduler facade ``serving.api.PagedBackend`` drives: a
+    :class:`PrefillWorker` and a :class:`DecodeWorker`, each a full
+    ``Scheduler`` over its OWN page pool, joined by a
+    :class:`PageStreamTransport`.
+
+    Each :meth:`step` runs one prefill-replica tick, harvests every
+    request that finished its prompt (its first token is already emitted
+    by the prefill replica — TTFT is a prefill-side quantity, the whole
+    point of disaggregation), streams its pages across, injects it into
+    the decode replica, and runs one decode-replica tick. Keyword
+    arguments pass to BOTH schedulers; ``prefill_kwargs=`` /
+    ``decode_kwargs=`` dicts override per side (e.g. a small prefill pool
+    and a large decode pool). ``speculate_k`` applies to the DECODE
+    replica only — the prefill replica never decodes past token 0, so
+    drafting there is dead weight. ``page_size`` must match across the
+    two pools (the stream ships raw pages).
+
+    Greedy streams are bit-identical to a single-scheduler run and to the
+    per-request ``Engine.generate`` oracle: the handoff is the proven
+    swap export/restore round trip, and both replicas run the same jitted
+    tick functions (``tests/test_sharded_serving.py`` pins it on the
+    differential fuzz schedules)."""
+
+    def __init__(self, cfg, params, opts=None, *, telemetry=None,
+                 transport: PageStreamTransport | None = None,
+                 prefill_kwargs: dict | None = None,
+                 decode_kwargs: dict | None = None, **scheduler_kwargs):
+        from repro.models.transformer import RuntimeOpts
+        from repro.serving.scheduler import Scheduler
+
+        opts = RuntimeOpts() if opts is None else opts
+        self.telemetry = telemetry
+        self.transport = transport if transport is not None \
+            else PageStreamTransport(telemetry=telemetry)
+        pk = dict(scheduler_kwargs)
+        pk["speculate_k"] = 0  # prefill replica never decodes past token 0
+        pk.update(prefill_kwargs or {})
+        dk = dict(scheduler_kwargs)
+        dk.update(decode_kwargs or {})
+        self.prefill = Scheduler(cfg, params, opts, telemetry=telemetry,
+                                 **pk)
+        self.decode = Scheduler(cfg, params, opts, telemetry=None, **dk)
+        if self.prefill.pool.page_size != self.decode.pool.page_size:
+            raise ValueError("prefill and decode pools must share page_size")
+        self.workers = (PrefillWorker(self.prefill),
+                        DecodeWorker(self.decode))
+
+    # ------------------------------------------------- scheduler facade
+
+    def submit(self, prompt, max_new_tokens=None, eos_id=None, *,
+               prefix_key=None, prefix_len=None, priority=None,
+               sampling=None) -> int:
+        """Requests enter through the PREFILL replica (rids are therefore
+        globally unique: the decode replica only ever ``inject``s)."""
+        return self.prefill.submit(prompt, max_new_tokens, eos_id,
+                                   prefix_key=prefix_key,
+                                   prefix_len=prefix_len, priority=priority,
+                                   sampling=sampling)
+
+    @property
+    def pending(self) -> bool:
+        return self.prefill.pending or self.decode.pending
+
+    def step(self) -> bool:
+        """One disaggregated tick: prefill tick → harvest → page stream →
+        inject → decode tick. Returns whether work remains."""
+        pre, dec = self.workers
+        pre.tick()
+        for req in pre.harvest():
+            req.snapshot = self.transport.send(
+                self.prefill.pool, self.decode.pool, req.snapshot,
+                rid=req.rid)
+            dec.accept(req)
+        dec.tick()
+        return self.pending
+
+    def run(self) -> dict:
+        while self.step():
+            pass
+        self.release_prefixes()
+        return self.results
+
+    def abort(self, rid: int) -> bool:
+        return self.prefill.abort(rid) or self.decode.abort(rid)
+
+    def drain_events(self) -> list:
+        """Prefill-replica events first (each request's token 0), then
+        decode-replica events — per-request index order is preserved
+        because a request's handoff happens strictly after its first
+        token and before its second."""
+        return self.prefill.drain_events() + self.decode.drain_events()
+
+    def drain_finished(self) -> list:
+        return self.prefill.drain_finished() + self.decode.drain_finished()
+
+    @property
+    def results(self) -> dict:
+        return {**self.prefill.results, **self.decode.results}
+
+    @property
+    def finish_reasons(self) -> dict:
+        return {**self.prefill.finish_reasons, **self.decode.finish_reasons}
+
+    def _release_dicts(self) -> tuple:
+        """The REAL retained dicts (``results``/``finish_reasons`` above
+        are merged copies — popping those would silently retain)."""
+        return (self.prefill.results, self.prefill.finish_reasons,
+                self.decode.results, self.decode.finish_reasons)
+
+    def release_prefixes(self) -> None:
+        self.prefill.release_prefixes()
+        self.decode.release_prefixes()
+
+    @property
+    def stats(self):
+        """Merged view over both replicas' ``SchedulerStats``: counters
+        sum, peaks take the max, dict fields merge (prefill first, so
+        TTFT — a prefill-replica quantity — wins on collision)."""
+        merged = {}
+        for f in dataclasses.fields(self.prefill.stats):
+            a = getattr(self.prefill.stats, f.name)
+            b = getattr(self.decode.stats, f.name)
+            if isinstance(a, dict):
+                merged[f.name] = {**b, **a}
+            elif f.name.startswith("peak_"):
+                merged[f.name] = max(a, b)
+            else:
+                merged[f.name] = a + b
+        return type(self.prefill.stats)(**merged)

@@ -119,13 +119,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.sampling import (SamplingParams, sample_tokens_with_logprobs,
+from repro.core.sampling import (SamplingParams, bias_rows,
+                                 sample_tokens_with_logprobs,
                                  speculative_verify, truncate_at_stop)
 from repro.models.transformer import (RuntimeOpts, packed_step,
                                       paged_decode_step, paged_prefill,
-                                      paged_prefill_shared, paged_verify_step)
+                                      paged_prefill_shared, paged_verify_step,
+                                      sharded_step_fns)
 from repro.serving.kv_pool import (DEFAULT_PAGE_SIZE, PagedKVPool,
                                    PoolExhaustedError, SharedPrefix)
+from repro.serving.page_transport import HostSwapTransport
 
 # the adaptive-prefill ladder ``prefill_chunk="auto"`` expands to: three
 # compiled chunk shapes, picked per tick by batch composition (see
@@ -345,7 +348,19 @@ class Scheduler:
     compiled verify width and the per-request cap —
     ``SamplingParams(speculate_k=)`` may lower it per request, and 0
     (the default) disables speculation entirely, leaving every code path
-    byte-identical to the non-speculative scheduler."""
+    byte-identical to the non-speculative scheduler.
+
+    ``mesh=`` (a ``("kv", "model")`` mesh from
+    ``launch.mesh.make_serving_mesh``) turns every tick MULTI-DEVICE: the
+    pool's page axis is sharded over the mesh's "kv" axis
+    (``kv_pool.PagedKVPool(mesh=)`` — each device stores 1/kv of the
+    pages) and the five step functions are swapped for their
+    ``models.transformer.sharded_step_fns`` shard_map lowerings
+    (kv-heads split over "model", exact all_gathers at the attention
+    boundary — no psum). The host-side scheduling logic, the per-slot
+    sampling lanes and the compiled-shape accounting are UNTOUCHED, and
+    greedy token streams stay bit-identical to the single-device
+    scheduler (``tests/test_sharded_serving.py``)."""
 
     def __init__(self, cfg: ArchConfig, params,
                  opts: RuntimeOpts = RuntimeOpts(),
@@ -356,7 +371,7 @@ class Scheduler:
                  prefill_chunk: int | str | tuple = 256,
                  preempt_cooldown: int = 1, tick_mode: str | None = None,
                  token_budget: int | None = None, speculate_k: int = 0,
-                 telemetry=None):
+                 telemetry=None, mesh=None):
         if resume not in ("swap", "refill"):
             raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
         if prefill_mode not in ("chunked", "wave"):
@@ -381,8 +396,10 @@ class Scheduler:
         if speculate_k < 0:
             raise ValueError(f"speculate_k must be >= 0, got {speculate_k}")
         self.cfg, self.params, self.opts = cfg, params, opts
+        self.mesh = mesh
         self.pool = PagedKVPool(cfg, num_pages=num_pages, page_size=page_size,
-                                max_requests=max_slots, max_seq_len=max_seq_len)
+                                max_requests=max_slots, max_seq_len=max_seq_len,
+                                mesh=mesh)
         self.max_slots = max_slots
         self.lazy_growth = lazy_growth
         self.resume = resume
@@ -402,6 +419,9 @@ class Scheduler:
         # guarded on it, so the disabled path never calls the tracer (and
         # never forces a device sync): telemetry=None is a strict no-op
         self.telemetry = telemetry
+        # the preempt/resume page mover — all swap spans + byte accounting
+        # flow through the unified transport layer (page_transport)
+        self._swap = HostSwapTransport(telemetry=telemetry)
         self._tick = 0
         self._shapes: set = set()  # distinct jitted call shapes dispatched
         self.queue: deque = deque()
@@ -425,62 +445,88 @@ class Scheduler:
         self._op_temp = np.zeros((max_slots,), np.float32)
         self._op_topk = np.zeros((max_slots,), np.int32)
         self._op_topp = np.ones((max_slots,), np.float32)
+        # dense per-slot logit-bias rows (SamplingParams.logit_bias) — an
+        # all-zero row is the bitwise identity, so bias-free slots ride the
+        # same compiled shape untouched
+        self._op_bias = np.zeros((max_slots, cfg.vocab_size), np.float32)
         # device-resident copy, rebuilt lazily after _set_ops/_reset_ops —
         # the hot decode tick must not re-upload unchanged operands
         self._dev_ops: tuple | None = None
-        self._prefill = jax.jit(
-            lambda params, tokens, caches, positions: paged_prefill(
-                params, cfg, tokens, caches, positions, opts))
-        self._prefill_shared = jax.jit(
-            lambda params, tokens, caches, positions: paged_prefill_shared(
-                params, cfg, tokens, caches, positions, opts))
+        if mesh is not None:
+            # shard_map lowerings of the five step fns — same signatures,
+            # so the jitted tick wrappers below are shared verbatim
+            sf = sharded_step_fns(cfg, opts, mesh)
+            prefill_fn, prefill_shared_fn = sf["prefill"], sf["prefill_shared"]
+            decode_fn, packed_fn, verify_fn = (sf["decode"], sf["packed"],
+                                               sf["verify"])
+        else:
+            prefill_fn = lambda params, tokens, caches, positions: \
+                paged_prefill(params, cfg, tokens, caches, positions, opts)
+            prefill_shared_fn = lambda params, tokens, caches, positions: \
+                paged_prefill_shared(params, cfg, tokens, caches, positions,
+                                     opts)
+            decode_fn = lambda params, tokens, caches, pos: \
+                paged_decode_step(params, cfg, tokens, caches, pos, opts)
+            packed_fn = lambda params, tokens, caches, positions, slots, \
+                logit_rows, quant_fresh: \
+                packed_step(params, cfg, tokens, caches, positions, slots,
+                            logit_rows, opts, quant_fresh)
+            verify_fn = lambda params, tokens, caches, positions: \
+                paged_verify_step(params, cfg, tokens, caches, positions,
+                                  opts)
+        self._prefill = jax.jit(prefill_fn)
+        self._prefill_shared = jax.jit(prefill_shared_fn)
 
-        def decode_sample(params, tokens, caches, pos, keys, t, temp, tk, tp):
+        def decode_sample(params, tokens, caches, pos, keys, t, temp, tk, tp,
+                          bias):
             # decode + sampling as ONE jitted function: logits never leave
             # the device — only the sampled token ids (and their logprobs)
             # cross to the host
-            logits, new_caches = paged_decode_step(params, cfg, tokens,
-                                                   caches, pos, opts)
+            logits, new_caches = decode_fn(params, tokens, caches, pos)
             toks, lps = sample_tokens_with_logprobs(logits, keys, t,
-                                                    temp, tk, tp)
+                                                    temp, tk, tp, bias)
             return toks, lps, new_caches
 
         self._decode = jax.jit(decode_sample)
 
         def packed_sample(params, tokens, caches, positions, slots,
-                          logit_rows, keys, t, temp, tk, tp):
+                          logit_rows, quant_fresh, keys, t, temp, tk, tp,
+                          bias):
             # the whole packed tick as ONE jitted function: embed → varlen
-            # attention over the int8 pages → per-slot sampling lanes
-            logits, new_caches = packed_step(params, cfg, tokens, caches,
-                                             positions, slots, logit_rows,
-                                             opts)
+            # attention over the int8 pages → per-slot sampling lanes.
+            # quant_fresh marks the buffer's DECODE rows: their fresh
+            # self-keys round-trip through the int8 quantizer so they
+            # attend the same values a sequential decode step reads back
+            # from the pool (bit-identity with the chunked/wave ticks)
+            logits, new_caches = packed_fn(params, tokens, caches, positions,
+                                           slots, logit_rows, quant_fresh)
             toks, lps = sample_tokens_with_logprobs(logits, keys, t,
-                                                    temp, tk, tp)
+                                                    temp, tk, tp, bias)
             return toks, lps, new_caches
 
         self._packed = jax.jit(packed_sample)
         self._sample = jax.jit(sample_tokens_with_logprobs)
 
-        def sample_rows(logits, rows, keys, t, temp, tk, tp):
+        def sample_rows(logits, rows, keys, t, temp, tk, tp, bias):
             # wave-mode prefill samples a SUBSET of slot rows: gather the
             # rows' lanes from the cached full-slot operands on device
             # instead of rebuilding (R_adm,)-shaped host arrays per call
             return sample_tokens_with_logprobs(
-                logits, keys[rows], t, temp[rows], tk[rows], tp[rows])
+                logits, keys[rows], t, temp[rows], tk[rows], tp[rows],
+                bias[rows])
 
         self._sample_rows = jax.jit(sample_rows)
 
         def verify_sample(params, tokens, caches, positions, gather, draft,
-                          draft_len, keys, t0, temp, tk, tp):
+                          draft_len, keys, t0, temp, tk, tp, bias):
             # speculative tick (every tick mode): one multi-token verify
             # through the pool, logits realigned from the right-aligned call layout
             # to generation-index order, then draft acceptance — all ONE
             # jitted function; only accepted tokens cross to the host
-            logits, new_caches = paged_verify_step(params, cfg, tokens,
-                                                   caches, positions, opts)
+            logits, new_caches = verify_fn(params, tokens, caches, positions)
             logits = jnp.take_along_axis(logits, gather[:, :, None], axis=1)
             out, n, lps = speculative_verify(draft, draft_len, logits,
-                                             keys, t0, temp, tk, tp)
+                                             keys, t0, temp, tk, tp, bias)
             return out, n, lps, new_caches
 
         self._verify = jax.jit(verify_sample)
@@ -625,6 +671,52 @@ class Scheduler:
             self.telemetry.request_finished(req.rid, track, "abort",
                                             len(generated))
 
+    def extract(self, rid: int) -> Request | None:
+        """Detach a RUNNING request from its slot and return it carrying a
+        host snapshot of every page position it has WRITTEN — the
+        prefill→decode handoff of the disaggregated deployment
+        (``serving.page_transport``). The snapshot machinery is exactly
+        the swap-preemption export (``kv_pool.export_slot``), so a request
+        re-injected into ANOTHER scheduler's queue (:meth:`inject`)
+        resumes its decode bit-identically — same guarantee as a
+        preempt-and-resume on one scheduler. The slot and its pages free
+        immediately; already-emitted tokens ride along in
+        ``req.generated`` and are never re-sampled. Returns None when the
+        rid is not currently in a slot (queued/finished requests are not
+        extractable)."""
+        for i, st in enumerate(self.slots):
+            if st is None or st.req.rid != rid:
+                continue
+            st.req.generated = list(st.generated)
+            # snapshot only WRITTEN positions: the last generated token is
+            # the next decode input, not yet in the pool (same accounting
+            # as the swap-preemption export)
+            if st.generated:
+                written = len(st.req.prompt) + len(st.generated) - 1
+            else:
+                written = st.prefilled
+            st.req.snapshot = self.pool.export_slot(i, n_tokens=written)
+            self.pool.free(i)
+            self.slots[i] = None
+            self._reset_ops(i)
+            if self.telemetry is not None:
+                self.telemetry.event("extract", track=f"slot{i}", rid=rid,
+                                     tokens=written)
+            return st.req
+        return None
+
+    def inject(self, req: Request) -> None:
+        """Enqueue a :class:`Request` EXTRACTED from another scheduler
+        (snapshot and generated tokens intact) — the decode-replica side
+        of the disaggregated handoff. The next admission wave restores the
+        snapshot through the ordinary swap-resume path. The caller owns
+        rid uniqueness: injected rids come from the extracting scheduler,
+        so a scheduler that both ``submit``s and ``inject``s must keep the
+        two rid spaces disjoint (``serving.page_transport`` does)."""
+        self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.request_submitted(req.rid)
+
     def drain_events(self) -> list:
         """Return and clear the per-token events emitted since the last
         call: ``(rid, token_index, token, logprob)`` tuples in emission
@@ -654,34 +746,42 @@ class Scheduler:
         key = np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)
         row = (key, np.float32(sp.temperature), np.int32(sp.top_k),
                np.float32(sp.top_p))
+        brow = bias_rows([sp], self._op_bias.shape[1])[0] \
+            if sp.logit_bias else None
         if (np.array_equal(self._op_keys[slot], key)
                 and self._op_temp[slot] == row[1]
                 and self._op_topk[slot] == row[2]
-                and self._op_topp[slot] == row[3]):
+                and self._op_topp[slot] == row[3]
+                and (not self._op_bias[slot].any() if brow is None
+                     else np.array_equal(self._op_bias[slot], brow))):
             return
         (self._op_keys[slot], self._op_temp[slot], self._op_topk[slot],
          self._op_topp[slot]) = row
+        self._op_bias[slot] = 0.0 if brow is None else brow
         self._dev_ops = None
 
     def _reset_ops(self, slot: int) -> None:
         if (self._op_temp[slot] == 0.0 and self._op_topk[slot] == 0
                 and self._op_topp[slot] == 1.0
-                and not self._op_keys[slot].any()):
+                and not self._op_keys[slot].any()
+                and not self._op_bias[slot].any()):
             return  # already the greedy reset row — keep the device copy
         self._op_keys[slot] = 0
         self._op_temp[slot] = 0.0
         self._op_topk[slot] = 0
         self._op_topp[slot] = 1.0
+        self._op_bias[slot] = 0.0
         self._dev_ops = None
 
     def _device_ops(self) -> tuple:
-        """(keys, temperature, top_k, top_p) for ALL slot rows, uploaded
-        once per operand change rather than once per tick."""
+        """(keys, temperature, top_k, top_p, bias) for ALL slot rows,
+        uploaded once per operand change rather than once per tick."""
         if self._dev_ops is None:
             self._dev_ops = (jnp.asarray(self._op_keys),
                              jnp.asarray(self._op_temp),
                              jnp.asarray(self._op_topk),
-                             jnp.asarray(self._op_topp))
+                             jnp.asarray(self._op_topp),
+                             jnp.asarray(self._op_bias))
         return self._dev_ops
 
     def _register_shape(self, *shape) -> None:
@@ -743,14 +843,8 @@ class Scheduler:
             # its already-generated tokens — both re-admissions
             resumed = req.snapshot is not None or bool(req.generated)
             if req.snapshot is not None:
-                nbytes = self.pool.snapshot_bytes(req.snapshot)
-                t0 = tel.now() if tel is not None else 0.0
-                slot = self.pool.restore_slot(req.snapshot,
-                                              reserve_tokens=target)
-                if tel is not None:
-                    tel.add_span("swap_resume", t0, tel.now(),
-                                 track=f"slot{slot}", rid=req.rid,
-                                 bytes=nbytes)
+                slot = self._swap.swap_in(self.pool, req.snapshot,
+                                          reserve_tokens=target, rid=req.rid)
                 req.snapshot = None
                 restored.append(slot)
             else:
@@ -859,15 +953,15 @@ class Scheduler:
         the per-slot arrays are never rebuilt host-side per call); rows
         that didn't finish their prompt this call simply discard the
         sample. Returns (tokens, logprobs) as host arrays."""
-        keys, temp, tk, tp = self._device_ops()
+        keys, temp, tk, tp, bias = self._device_ops()
         if rows is None:
             toks, lps = self._sample(logits, keys,
                                      jnp.zeros((self.max_slots,), jnp.int32),
-                                     temp, tk, tp)
+                                     temp, tk, tp, bias)
         else:
             toks, lps = self._sample_rows(
                 logits, jnp.asarray(np.asarray(rows, np.int32)), keys,
-                jnp.zeros((len(rows),), jnp.int32), temp, tk, tp)
+                jnp.zeros((len(rows),), jnp.int32), temp, tk, tp, bias)
         return np.asarray(toks), np.asarray(lps)
 
     def _pick_chunk(self) -> int:
@@ -1026,12 +1120,9 @@ class Scheduler:
                 written = len(st.req.prompt) + len(st.generated) - 1
             else:
                 written = st.prefilled
-            t0 = tel.now() if tel is not None else 0.0
-            st.req.snapshot = self.pool.export_slot(victim, n_tokens=written)
-            if tel is not None:
-                tel.add_span("swap_out", t0, tel.now(),
-                             track=f"slot{victim}", rid=st.req.rid,
-                             bytes=self.pool.snapshot_bytes(st.req.snapshot))
+            st.req.snapshot = self._swap.swap_out(self.pool, victim,
+                                                  n_tokens=written,
+                                                  rid=st.req.rid)
             self.stats.peak_swap_bytes = max(self.stats.peak_swap_bytes,
                                              self.pool.swap_bytes)
         self.pool.free(victim)
@@ -1166,7 +1257,7 @@ class Scheduler:
             draft[i, :kd] = d
             dlen[i] = kd
             t0[i] = len(st.generated)
-        keys, temp, tk, tp = self._device_ops()
+        keys, temp, tk, tp, bias = self._device_ops()
         tel = self.telemetry
         if tel is not None:
             for i in active:
@@ -1176,7 +1267,7 @@ class Scheduler:
             caches=self.pool.device_caches(), positions=jnp.asarray(posn),
             gather=jnp.asarray(gather), draft=jnp.asarray(draft),
             draft_len=jnp.asarray(dlen), keys=keys, t0=jnp.asarray(t0),
-            temp=temp, tk=tk, tp=tp)
+            temp=temp, tk=tk, tp=tp, bias=bias)
         self.pool.update_from(new_caches)
         out, n_acc, lps = np.asarray(out), np.asarray(n_acc), np.asarray(lps)
         for i in active:
@@ -1211,7 +1302,7 @@ class Scheduler:
             tokens[i, 0] = self.slots[i].generated[-1]
             pos[i] = int(self.pool.lengths[i]) - 1  # position being written
             t[i] = len(self.slots[i].generated)
-        keys, temp, tk, tp = self._device_ops()
+        keys, temp, tk, tp, bias = self._device_ops()
         tel = self.telemetry
         if tel is not None:
             for i in active:
@@ -1219,7 +1310,7 @@ class Scheduler:
         nxt, lps, new_caches = self._decode(
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(), pos=jnp.asarray(pos),
-            keys=keys, t=jnp.asarray(t), temp=temp, tk=tk, tp=tp)
+            keys=keys, t=jnp.asarray(t), temp=temp, tk=tk, tp=tp, bias=bias)
         self.pool.update_from(new_caches)
         nxt, lps = np.asarray(nxt), np.asarray(lps)
         for i in active:
@@ -1256,6 +1347,11 @@ class Scheduler:
         tokens = np.zeros((1, t_budget), np.int32)
         posn = np.full((1, t_budget), -1, np.int32)
         slot_ids = np.full((1, t_budget), -1, np.int32)
+        # decode rows' fresh self-keys round-trip the int8 quantizer inside
+        # the packed step, so they attend exactly what a sequential decode
+        # step reads back from the pool; prefill rows keep f32 fresh keys
+        # (the same math as Engine's prompt prefill)
+        quant_fresh = np.zeros((1, t_budget), bool)
         logit_rows = np.zeros((self.max_slots,), np.int32)
         t_idx = np.zeros((self.max_slots,), np.int32)
         # decode rows are never cut
@@ -1274,6 +1370,7 @@ class Scheduler:
                 tokens[0, cur] = st.generated[-1]
                 posn[0, cur] = int(self.pool.lengths[i]) - 1
                 slot_ids[0, cur] = i
+                quant_fresh[0, cur] = True
                 logit_rows[i] = cur
                 t_idx[i] = len(st.generated)
                 cur += 1
@@ -1292,7 +1389,7 @@ class Scheduler:
         if cur == 0:
             return False
         self._register_shape("packed", self.max_slots, t_budget)
-        keys, temp, tk, tp = self._device_ops()
+        keys, temp, tk, tp, bias = self._device_ops()
         tel = self.telemetry
         if tel is not None:
             for i in decode_rows:
@@ -1302,7 +1399,8 @@ class Scheduler:
             self.params, jnp.asarray(tokens),
             caches=self.pool.device_caches(), positions=jnp.asarray(posn),
             slots=jnp.asarray(slot_ids), logit_rows=jnp.asarray(logit_rows),
-            keys=keys, t=jnp.asarray(t_idx), temp=temp, tk=tk, tp=tp)
+            quant_fresh=jnp.asarray(quant_fresh), keys=keys,
+            t=jnp.asarray(t_idx), temp=temp, tk=tk, tp=tp, bias=bias)
         if tel is not None:
             jax.block_until_ready(nxt)
             t1 = tel.now()

@@ -33,6 +33,7 @@ from repro.core.sampling import (broadcast_params, device_operands,
 from repro.core.payload import decode as payload_decode
 from repro.core.payload import encode as payload_encode
 from repro.models import layers as L
+from repro.serving.page_transport import TabqUplinkTransport
 from repro.models.transformer import (RuntimeOpts, _apply_blocks_cached,
                                       apply_head, embed_inputs, init_caches,
                                       make_positions, rope_tables)
@@ -135,6 +136,10 @@ class SplitEngine:
         # into the shared registry. None skips every tracer touch and
         # every device sync (the disabled path adds no host work)
         self.telemetry = telemetry
+        # the edge→cloud activation mover: every TS+TAB-Q payload's wire
+        # accounting (legacy "uplink" events + the unified transport
+        # span/histogram from serving.page_transport) flows through it
+        self._uplink = TabqUplinkTransport(telemetry=telemetry)
         # I_kv=1 with a paged cloud: the per-step KV shipment and the cloud's
         # resident memory are accounted at PAGE granularity from a shared
         # pool (serving.kv_pool) instead of a dense per-request cache — the
@@ -476,9 +481,7 @@ class SplitEngine:
         else:
             bits = float(h.size * 16)  # uncompressed fp16 uplink
         stats.uplink_bits_measured += bits
-        if tel is not None:
-            tel.event("uplink", track="split:uplink", bits=bits,
-                      stage="prefill", tokens=b * s)
+        self._uplink.uplink(bits, stage="prefill", tokens=b * s)
         t0 = tel.now() if tel is not None else 0.0
         if aligned:
             posn = np.tile(np.arange(s, dtype=np.int32), (b, 1))
@@ -580,9 +583,8 @@ class SplitEngine:
                 stats.uplink_bits_measured += bits
                 stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
                 stats.uplink_round_trips += 1
-                if tel is not None:
-                    tel.event("uplink", track="split:uplink", bits=bits,
-                              stage="speculate", tokens=b * k_eff, i_kv=i_kv)
+                self._uplink.uplink(bits, stage="speculate",
+                                    tokens=b * k_eff, i_kv=i_kv)
                 h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
                 t0 = tel.now() if tel is not None else 0.0
                 if i_kv:
@@ -692,9 +694,8 @@ class SplitEngine:
                 stats.uplink_bits_measured += bits
                 stats.uplink_bits_eq3 += self._eq3_bits(w, i_kv)
                 stats.uplink_round_trips += 1
-                if tel is not None:
-                    tel.event("uplink", track="split:uplink", bits=bits,
-                              stage="decode", step=step, i_kv=i_kv)
+                self._uplink.uplink(bits, stage="decode", step=step,
+                                    i_kv=i_kv)
 
                 h_buf = self._seq_write(h_buf, h_c, jnp.int32(n_hist))
                 n_hist += 1

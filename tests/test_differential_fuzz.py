@@ -10,21 +10,17 @@ schedule is SHRUNK — jobs dropped one at a time while the failure
 reproduces — so the assertion message carries a minimal repro, not a
 20-request haystack.
 
-Known numerics caveat, pinned here deliberately: the packed tick runs the
-varlen flat-batch kernel, which attends a decode token's OWN key as fresh
-f32 (the in-segment convention, PR6) where the Engine/chunked/verify paths
-read it int8-quantized from the cache — a near-tie in the top-2 logits can
-flip the argmax on ANY prompt, so exact-vs-Engine is not a property the
-packed K=0 path has (the varlen prefill kernel's reduction order likewise
-differs from the Engine's). For packed configs the oracle is therefore a
-SOLO run of the same request through a packed scheduler with the same
-config — the differential claim becomes schedule-INVARIANCE: batching,
-staggered admission, aborts, preemption and swap must never change a
-request's stream. Chunked/wave (either k) keep the stronger per-request
-Engine oracle: those paths — including the speculative verify, which reads
-every key through the pool exactly like sequential decode steps — are
-exact against it by construction. (Packed speculation == Engine on curated
-workloads is pinned separately in test_scheduler.py.)
+Every config — packed included — is held to the per-request Engine oracle.
+The packed tick historically could NOT be (PR6): the varlen flat-batch
+kernel attended a decode token's OWN key as fresh f32 where the
+Engine/chunked/verify paths read it int8-quantized from the cache, and a
+near-tie in the top-2 logits flipped the argmax. The scheduler now marks
+the packed buffer's decode rows in a ``quant_fresh`` mask and the packed
+step routes those rows' fresh k/v through the int8 round trip
+(``codes.astype(f32) * scale`` — the exact dequantized values a
+sequential decode step reads back from the pool), which restores the
+bit-identity and retired the solo-run invariance oracle this file used
+to carry for packed configs.
 
 Tier-1 runs a small schedule count; ``-m slow`` scales the same walk past
 200 schedules (the CI slow job).
@@ -64,24 +60,6 @@ def oracle(tiny_model):
         key = (prompt.tobytes(), len(prompt), max_new)
         if key not in cache:
             cache[key] = eng.generate(prompt[None], max_new).tokens[0]
-        return cache[key]
-
-    return get
-
-
-def _solo_oracle(make_sched):
-    """Per-request reference for the packed configs: the same request run
-    ALONE through a long-lived scheduler with the identical config — pins
-    schedule-invariance where kernel numerics rule out the Engine oracle."""
-    sched = make_sched()
-    cache = {}
-
-    def get(prompt, max_new):
-        key = (prompt.tobytes(), len(prompt), max_new)
-        if key not in cache:
-            rid = sched.submit(prompt, max_new)
-            cache[key] = sched.run()[rid]
-            sched.drain_events()
         return cache[key]
 
     return get
@@ -190,8 +168,6 @@ def _fuzz(tiny_model, oracle, mode, k, n_schedules, seed=0):
                          max_slots=3, tick_mode=mode, speculate_k=k,
                          lazy_growth=True)
 
-    if mode == "packed":
-        oracle = _solo_oracle(make_sched)
     sched = make_sched()
     rng = np.random.default_rng(seed)
     for n in range(n_schedules):
@@ -215,10 +191,9 @@ def _fuzz(tiny_model, oracle, mode, k, n_schedules, seed=0):
                          ids=[f"{m}-k{k}" for m, k in CONFIGS])
 def test_fuzz_schedules_match_engine(tiny_model, oracle, mode, k):
     """Tier-1: a handful of randomized schedules per config — every
-    non-aborted request's greedy stream equals the per-request oracle's
-    (the Engine; a solo same-config run for packed), aborted ones are
-    exact prefixes, events arrive in index order, the pool drains
-    clean."""
+    non-aborted request's greedy stream equals the per-request Engine
+    oracle's, aborted ones are exact prefixes, events arrive in index
+    order, the pool drains clean."""
     _fuzz(tiny_model, oracle, mode, k, n_schedules=3)
 
 

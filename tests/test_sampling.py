@@ -8,8 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.sampling import (SamplingParams, sample_tokens,
-                                 sampling_operands)
+from repro.core.sampling import (SamplingParams, bias_rows, sample_tokens,
+                                 sample_tokens_with_logprobs,
+                                 sampling_operands, speculative_verify,
+                                 token_logprobs)
 
 
 def _logits(r=4, v=32, seed=0):
@@ -139,3 +141,87 @@ def test_sampling_params_validation():
     assert SamplingParams().greedy
     assert SamplingParams(temperature=1.0, top_k=1).greedy
     assert not SamplingParams(temperature=1.0).greedy
+
+
+def test_logit_bias_normalization_and_rows():
+    """``logit_bias`` normalizes to a sorted (token, bias) tuple from a
+    dict or pair iterable; ``bias_rows`` densifies per-request rows and
+    range-checks token ids against the vocab."""
+    sp = SamplingParams(logit_bias={7: -2.0, 3: 1.5})
+    assert sp.logit_bias == ((3, 1.5), (7, -2.0))
+    assert SamplingParams(logit_bias=[(2, 0.5)]).logit_bias == ((2, 0.5),)
+    assert SamplingParams().logit_bias == ()
+    with pytest.raises(ValueError, match="logit_bias"):
+        SamplingParams(logit_bias={-1: 1.0})
+    rows = bias_rows([sp, SamplingParams()], vocab_size=10)
+    assert rows.shape == (2, 10)
+    assert rows[0, 3] == 1.5 and rows[0, 7] == -2.0
+    assert not rows[1].any()
+    with pytest.raises(ValueError, match="out of range"):
+        bias_rows([SamplingParams(logit_bias={10: 1.0})], vocab_size=10)
+
+
+def test_logit_bias_reshapes_greedy_argmax():
+    """A large positive bias redirects the greedy argmax to the biased
+    token; an all-zero bias row is a bitwise no-op on every lane."""
+    logits = _logits(r=3, v=16, seed=7)
+    am = np.argmax(np.asarray(logits), axis=-1)
+    target = int((am[0] + 1) % 16)  # provably not the raw argmax
+    params = [SamplingParams(logit_bias={target: 100.0}),
+              SamplingParams(),
+              SamplingParams(temperature=1.3, seed=11)]
+    keys, temp, tk, tp = _ops(params)
+    t = np.zeros((3,), np.int32)
+    bias = jnp.asarray(bias_rows(params, 16))
+    toks = np.asarray(sample_tokens(logits, keys, t, temp, tk, tp, bias))
+    assert toks[0] == target  # bias flipped the greedy row
+    assert toks[1] == am[1]  # unbiased greedy row untouched
+    # zero bias operand == no bias operand, bit for bit, sampled rows too
+    none = np.asarray(sample_tokens(logits, keys, t, temp, tk, tp, None))
+    zero = np.asarray(sample_tokens(logits, keys, t, temp, tk, tp,
+                                    jnp.zeros_like(bias)))
+    np.testing.assert_array_equal(none, zero)
+
+
+def test_logit_bias_logprobs_stay_raw():
+    """The emitted token follows the BIASED argmax but its reported
+    logprob is the raw distribution's value for that token."""
+    logits = _logits(r=1, v=16, seed=8)
+    target = int((np.argmax(np.asarray(logits)[0]) + 3) % 16)
+    params = [SamplingParams(logit_bias={target: 50.0})]
+    keys, temp, tk, tp = _ops(params)
+    bias = jnp.asarray(bias_rows(params, 16))
+    toks, lps = sample_tokens_with_logprobs(
+        logits, keys, np.zeros((1,), np.int32), temp, tk, tp, bias)
+    assert int(toks[0]) == target
+    want = np.asarray(token_logprobs(logits, toks))
+    np.testing.assert_array_equal(np.asarray(lps), want)
+
+
+def test_logit_bias_speculative_matches_prebias():
+    """Biased ``speculative_verify`` emits the same tokens as an unbiased
+    verify over pre-biased logits (so speculative and sequential biased
+    greedy decoding agree), while its logprobs come from the RAW logits."""
+    rng = np.random.default_rng(9)
+    r, kd, v = 2, 3, 16
+    logits = jnp.asarray(rng.normal(size=(r, kd + 1, v)) * 2.0, jnp.float32)
+    params = [SamplingParams(logit_bias={5: 30.0}), SamplingParams()]
+    keys, temp, tk, tp = _ops(params)
+    bias = jnp.asarray(bias_rows(params, v))
+    draft = jnp.asarray(rng.integers(0, v, (r, kd)), jnp.int32)
+    dlen = jnp.asarray([kd, 2], jnp.int32)
+    t0 = np.zeros((r,), np.int32)
+    out_b, n_b, lp_b = speculative_verify(draft, dlen, logits, keys, t0,
+                                          temp, tk, tp, bias)
+    out_p, n_p, lp_p = speculative_verify(draft, dlen,
+                                          logits + bias[:, None, :], keys,
+                                          t0, temp, tk, tp)
+    np.testing.assert_array_equal(np.asarray(out_b), np.asarray(out_p))
+    np.testing.assert_array_equal(np.asarray(n_b), np.asarray(n_p))
+    # row 0's every emitted position is the biased token (bias dominates)
+    assert np.all(np.asarray(out_b)[0, : int(n_b[0])] == 5)
+    # logprobs from the raw logits, not the biased ones
+    flat = np.asarray(token_logprobs(
+        logits.reshape(r * (kd + 1), v),
+        jnp.asarray(out_b).reshape(r * (kd + 1)))).reshape(r, kd + 1)
+    np.testing.assert_array_equal(np.asarray(lp_b), flat)
