@@ -1,0 +1,270 @@
+"""load_serving benchmark: Poisson-arrival HTTP load against the async
+service layer (``AsyncLLMServer`` + ``serving/http.py``).
+
+Boots the real HTTP/SSE server in-process on an ephemeral port (tiny
+randomly initialized model — wall-clock concurrency, not model quality,
+is the thing under test), then drives it OPEN-LOOP: request arrival
+times are drawn from a seeded exponential distribution (a Poisson
+process at ``--rate`` req/s), so a slow server makes arrivals pile up
+instead of politely waiting — the regime the paper's SLO machinery is
+for. Each client is a raw asyncio socket speaking
+``POST /v1/completions`` with ``stream=true`` and decoding SSE frames; a
+configurable fraction disconnects mid-stream (socket close, no abort
+RPC), exercising the disconnect→abort→pages-freed path under load.
+
+Reported per run: client-side achieved tokens/s and TTFT/e2e
+p50/p95/p99, the server-side ``/v1/metrics`` SLO dict (TTFT/TPOT/e2e
+percentiles stamped on the tick thread), and the post-drain KV-pool
+gauges — ``pages_in_use`` must return to 0, the no-leak gate
+``tools/load_report.py`` enforces. JSON artifact under
+experiments/load_serving/.
+
+  PYTHONPATH=src python -m benchmarks.load_serving [--smoke] [--url URL]
+
+``--smoke`` shrinks the burst (CI load-smoke step); ``--url`` targets an
+already-running server instead of booting one (skips the in-process
+pool-gauge section).
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "load_serving")
+
+# (num_requests, rate_req_per_s, abort_fraction)
+FULL = (48, 24.0, 0.2)
+SMOKE = (12, 16.0, 0.25)
+PAGE_SIZE = 4
+MAX_SLOTS = 3
+NUM_PAGES = 48
+PROMPT_LENS = (4, 6, 8, 12)
+MAX_TOKENS = (4, 6, 8)
+SHARED_PREFIX_LEN = 8          # half the prompts share this prefix head
+SHARED_FRACTION = 0.5          # ... so auto_prefix has something to find
+
+
+def _percentiles(xs) -> dict:
+    import numpy as np
+
+    if not xs:
+        return {}
+    return {q: round(float(np.percentile(xs, int(q[1:]))), 6)
+            for q in ("p50", "p95", "p99")}
+
+
+def _make_workload(vocab: int, n: int, rate: float, abort_frac: float,
+                   seed: int):
+    """Seeded Poisson arrivals + prompt mix. Returns a list of dicts:
+    arrival_s (cumulative), prompt, max_tokens, abort_after (token count
+    at which the client hangs up, or None)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    shared = rng.integers(0, vocab, (SHARED_PREFIX_LEN,)).tolist()
+    jobs = []
+    for i in range(n):
+        plen = int(rng.choice(PROMPT_LENS))
+        prompt = rng.integers(0, vocab, (plen,)).tolist()
+        if rng.random() < SHARED_FRACTION:
+            prompt = shared + prompt[: max(1, plen - SHARED_PREFIX_LEN)]
+        mt = int(rng.choice(MAX_TOKENS))
+        abort_after = None
+        if rng.random() < abort_frac and mt >= 3:
+            abort_after = int(rng.integers(1, mt - 1))
+        jobs.append({"arrival_s": float(arrivals[i]), "prompt": prompt,
+                     "max_tokens": mt, "abort_after": abort_after})
+    return jobs
+
+
+async def _read_headers(reader):
+    status = await reader.readline()
+    code = int(status.split()[1])
+    while await reader.readline() not in (b"\r\n", b"\n", b""):
+        pass
+    return code
+
+
+async def _http_get_json(host: str, port: int, path: str) -> dict:
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: {host}\r\n\r\n".encode())
+    await writer.drain()
+    await _read_headers(reader)
+    body = await reader.read()  # Connection: close — EOF-terminated
+    writer.close()
+    return json.loads(body)
+
+
+async def _client(host: str, port: int, job: dict, t0: float, res: dict):
+    """One open-loop client: waits for its Poisson arrival slot, streams
+    its completion over SSE, optionally hangs up mid-stream."""
+    from repro.serving.http import SSEParser
+
+    loop = asyncio.get_running_loop()
+    await asyncio.sleep(max(0.0, t0 + job["arrival_s"] - loop.time()))
+    t_submit = time.perf_counter()
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps({"prompt": job["prompt"],
+                       "max_tokens": job["max_tokens"],
+                       "stream": True}).encode()
+    writer.write((f"POST /v1/completions HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    try:
+        code = await _read_headers(reader)
+        if code != 200:
+            res["rejected"].append(code)
+            return
+        parser, tokens, ttft = SSEParser(), [], None
+        while True:
+            chunk = await reader.read(4096)
+            if not chunk:
+                return  # server closed without [DONE]: counted nowhere
+            for msg in parser.feed(chunk):
+                if msg == "[DONE]":
+                    res["e2e_s"].append(time.perf_counter() - t_submit)
+                    res["ttft_s"].append(ttft)
+                    res["tokens"] += len(tokens)
+                    res["completed"] += 1
+                    return
+                if msg.get("finished"):
+                    continue  # finish marker precedes [DONE]
+                if ttft is None:
+                    ttft = time.perf_counter() - t_submit
+                tokens.append(msg["token"])
+                if job["abort_after"] and len(tokens) >= job["abort_after"]:
+                    res["tokens"] += len(tokens)
+                    res["aborted"] += 1
+                    return  # finally-close = mid-stream disconnect
+    finally:
+        writer.close()
+
+
+async def _drive(host: str, port: int, jobs: list) -> tuple:
+    res = {"completed": 0, "aborted": 0, "tokens": 0, "rejected": [],
+           "ttft_s": [], "e2e_s": []}
+    loop = asyncio.get_running_loop()
+    t0 = loop.time() + 0.05
+    t_wall = time.perf_counter()
+    await asyncio.gather(*[_client(host, port, j, t0, res) for j in jobs])
+    wall = time.perf_counter() - t_wall
+    return res, wall
+
+
+async def _run(jobs: list, url: str | None, smoke: bool) -> dict:
+    rec: dict = {"config": {
+        "requests": len(jobs), "smoke": smoke,
+        "page_size": PAGE_SIZE, "max_slots": MAX_SLOTS,
+        "num_pages": NUM_PAGES, "auto_prefix": True,
+        "prompt_lens": list(PROMPT_LENS), "max_tokens": list(MAX_TOKENS),
+    }}
+    http = llm = None
+    if url is None:
+        import jax
+
+        from repro.configs import get_config
+        from repro.models.transformer import RuntimeOpts, init_params
+        from repro.serving.api import LLMServer
+        from repro.serving.async_engine import AsyncLLMServer
+        from repro.serving.http import ServingHTTPServer
+
+        cfg = get_config("llama2-7b").tiny()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opts = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False,
+                           quantized_kv=True, moe_capacity_factor=0.0)
+        llm = LLMServer(cfg, params, opts, backend="paged",
+                        num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+                        max_slots=MAX_SLOTS, auto_prefix=True)
+        http = ServingHTTPServer(AsyncLLMServer(llm))
+        await http.start()
+        host, port = http.host, http.port
+    else:
+        hostport = url.split("//")[-1].rstrip("/")
+        host, port = hostport.split(":")[0], int(hostport.split(":")[1])
+
+    try:
+        res, wall = await _drive(host, port, jobs)
+        if llm is not None:  # let disconnect-aborts flush before scraping
+            deadline = time.perf_counter() + 30.0
+            while llm.pending and time.perf_counter() < deadline:
+                await asyncio.sleep(0.02)
+        metrics = await _http_get_json(host, port, "/v1/metrics")
+        health = await _http_get_json(host, port, "/healthz")
+    finally:
+        if http is not None:
+            await http.stop()
+
+    rec["client"] = {
+        "completed": res["completed"], "client_aborts": res["aborted"],
+        "rejected": len(res["rejected"]), "tokens_streamed": res["tokens"],
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(res["tokens"] / wall, 2),
+        "ttft_s": _percentiles(res["ttft_s"]),
+        "e2e_s": _percentiles(res["e2e_s"]),
+    }
+    rec["server_metrics"] = {k: v for k, v in sorted(metrics.items())
+                             if k.startswith("requests.")}
+    rec["health"] = health
+    if llm is not None:
+        rec["pool"] = llm.backend.scheduler.pool.gauges()
+        rec["scheduler"] = {
+            "auto_prefix_hits": llm.backend.scheduler.stats.auto_prefix_hits,
+            "prefix_forks": llm.backend.scheduler.stats.prefix_forks,
+        }
+    return rec
+
+
+def bench_load_serving(smoke: bool = False, url: str | None = None,
+                       seed: int = 0):
+    n, rate, abort_frac = SMOKE if smoke else FULL
+    # vocab matches the in-process tiny config; a --url server must accept
+    # the same token-id range (serving/http.py's demo CLI defaults do)
+    from repro.configs import get_config
+
+    vocab = get_config("llama2-7b").tiny().vocab_size
+    jobs = _make_workload(vocab, n, rate, abort_frac, seed)
+    rec = asyncio.run(_run(jobs, url, smoke))
+    rec["config"]["rate_req_per_s"] = rate
+    rec["config"]["abort_fraction"] = abort_frac
+    rec["config"]["seed"] = seed
+
+    from benchmarks.common import env_section
+    rec.update(env_section(deployment="async-http"))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "load_serving_smoke.json" if smoke
+                       else "load_serving.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    c, sm = rec["client"], rec["server_metrics"]
+    derived = (f"tok/s={c['tokens_per_s']} done={c['completed']} "
+               f"aborts={c['client_aborts']} "
+               f"ttft_p99={c['ttft_s'].get('p99')} "
+               f"srv_tpot_p50={sm.get('requests.tpot_s.p50')}")
+    return [("load_serving/poisson", c["wall_s"] * 1e6, derived)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small Poisson burst (CI load-smoke step)")
+    ap.add_argument("--url", default=None,
+                    help="target an already-running server "
+                         "(http://host:port) instead of booting one")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    for name, us, derived in bench_load_serving(smoke=args.smoke,
+                                                url=args.url,
+                                                seed=args.seed):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ def _registry():
     from benchmarks import paper_benchmarks as pb
     from benchmarks.chunked_prefill import bench_chunked_prefill
     from benchmarks.decode_path import bench_decode_path
+    from benchmarks.load_serving import bench_load_serving
     from benchmarks.packed_tick import bench_packed_tick
     from benchmarks.prefix_sharing import bench_prefix_sharing
     from benchmarks.ragged_batch import bench_ragged_batch
@@ -28,6 +29,7 @@ def _registry():
     return {
         "chunked_prefill": bench_chunked_prefill,
         "decode_path": bench_decode_path,
+        "load_serving": bench_load_serving,
         "packed_tick": bench_packed_tick,
         "prefix_sharing": bench_prefix_sharing,
         "ragged_batch": bench_ragged_batch,

@@ -14,6 +14,9 @@ from repro.serving.api import (FusedBackend, GenerationRequest,  # noqa: F401
                                LLMServer, PagedBackend, RequestMetrics,
                                RequestOutput, ServingBackend, SplitBackend,
                                TokenEvent)
+from repro.serving.async_engine import (AdmissionError,  # noqa: F401
+                                        AsyncLLMServer, EngineClosedError)
+from repro.serving.http import ServingHTTPServer  # noqa: F401
 from repro.serving.engine import Engine, GenerationResult  # noqa: F401
 from repro.serving.kv_pool import (PagedKVPool,  # noqa: F401
                                    PoolExhaustedError)

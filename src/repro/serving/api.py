@@ -99,6 +99,12 @@ class RequestMetrics:
     submit_s: float = 0.0  # perf_counter stamp at submit
     ttft_s: float | None = None  # submit → first streamed token
     latency_s: float | None = None  # submit → finish
+    # submit → finish (same stamp pair as latency_s, kept as its own field
+    # so SLO surfaces — LLMServer.metrics(), /v1/metrics — read one
+    # canonical end-to-end name). Populated on the thread that drives the
+    # backend (the async front end's tick thread), so it is correct with
+    # telemetry=None
+    e2e_s: float | None = None
     # scheduling quanta from submit to first token: scheduler ticks on the
     # paged backend, server steps on the fused/split replay backends
     ttft_ticks: int | None = None
@@ -143,6 +149,9 @@ class ServingBackend(Protocol):
 
     @property
     def pending(self) -> bool: ...
+
+    @property
+    def queue_depth(self) -> int: ...
 
     def outputs(self) -> dict: ...
 
@@ -227,6 +236,12 @@ class _ReplayBackend(_RequestBook):
     def pending(self) -> bool:
         return bool(self._queued or self._streams or self._pending_events)
 
+    @property
+    def queue_depth(self) -> int:
+        """Requests accepted but not yet computing — the replay backends'
+        admission-backpressure signal (``AsyncLLMServer`` bounds it)."""
+        return len(self._queued)
+
     def _release_dicts(self) -> tuple:
         return (self._split_stats, self._submit_step)
 
@@ -251,7 +266,7 @@ class _ReplayBackend(_RequestBook):
 
     def _finalize(self, rid: int, gen, reason: str) -> None:
         m = self._metrics[rid]
-        m.latency_s = time.perf_counter() - m.submit_s
+        m.latency_s = m.e2e_s = time.perf_counter() - m.submit_s
         self._outputs[rid] = RequestOutput(
             rid, self._reqs[rid].prompt, np.asarray(gen, np.int32),
             finished=True, finish_reason=reason, metrics=m,
@@ -442,6 +457,16 @@ class PagedBackend(_RequestBook):
     def pending(self) -> bool:
         return self.scheduler.pending or bool(self._pending_events)
 
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting UNADMITTED in the scheduler queue (slots and
+        pages all busy) — the paged admission-backpressure signal. The
+        disaggregated facade sums both replicas' queues."""
+        sched = self.scheduler
+        if hasattr(sched, "queue"):
+            return len(sched.queue)
+        return len(sched.prefill.queue) + len(sched.decode.queue)
+
     def _release_dicts(self) -> tuple:
         rd = getattr(self.scheduler, "_release_dicts", None)
         if rd is not None:  # disaggregated facade: merged-copy properties
@@ -477,7 +502,7 @@ class PagedBackend(_RequestBook):
             gen = np.asarray(sched.results[rid][req.prompt.shape[0]:],
                              np.int32)
             m = self._metrics[rid]
-            m.latency_s = now - m.submit_s
+            m.latency_s = m.e2e_s = now - m.submit_s
             # tracer-sourced when tracing (the first-token span records the
             # tick), scheduler stats otherwise — identical values, but the
             # tracer copy survives a stats reset
@@ -558,6 +583,12 @@ class LLMServer:
     def pending(self) -> bool:
         return self.backend.pending
 
+    @property
+    def queue_depth(self) -> int:
+        """Requests accepted but not yet scheduled — what the async front
+        end's bounded admission (429 backpressure) is measured against."""
+        return getattr(self.backend, "queue_depth", 0)
+
     def stream(self):
         """Drive the backend, yielding :class:`TokenEvent`s as they are
         produced, until every submitted request has finished. Requests
@@ -606,19 +637,31 @@ class LLMServer:
         finished = self.backend.outputs()
         out["requests.retained"] = len(finished)
         ttft, lat = Histogram(), Histogram()
-        ticks = Histogram()
+        ticks, e2e, tpot = Histogram(), Histogram(), Histogram()
         for o in finished.values():
             out[f"requests.reason.{o.finish_reason}"] = out.get(
                 f"requests.reason.{o.finish_reason}", 0) + 1
-            if o.metrics.ttft_s is not None:
-                ttft.record(o.metrics.ttft_s)
-            if o.metrics.latency_s is not None:
-                lat.record(o.metrics.latency_s)
-            if o.metrics.ttft_ticks is not None:
-                ticks.record(o.metrics.ttft_ticks)
+            m = o.metrics
+            if m.ttft_s is not None:
+                ttft.record(m.ttft_s)
+            if m.latency_s is not None:
+                lat.record(m.latency_s)
+            if m.ttft_ticks is not None:
+                ticks.record(m.ttft_ticks)
+            # e2e_s falls back to latency_s so outputs stamped by older
+            # drivers still aggregate; TPOT is the post-first-token decode
+            # cadence — (e2e - ttft) / (n - 1), requests with one token
+            # have no decode phase to measure
+            e2e_v = m.e2e_s if m.e2e_s is not None else m.latency_s
+            if e2e_v is not None:
+                e2e.record(e2e_v)
+                if m.ttft_s is not None and len(o.tokens) > 1:
+                    tpot.record((e2e_v - m.ttft_s) / (len(o.tokens) - 1))
         for name, h in (("requests.ttft_s", ttft),
                         ("requests.latency_s", lat),
-                        ("requests.ttft_ticks", ticks)):
+                        ("requests.ttft_ticks", ticks),
+                        ("requests.e2e_s", e2e),
+                        ("requests.tpot_s", tpot)):
             for k, v in h.summary().items():
                 out[f"{name}.{k}"] = v
         return out

@@ -112,6 +112,7 @@ remains the static-batch fast path.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
 
 import jax
@@ -235,6 +236,8 @@ class SchedulerStats:
     spec_accepted: int = 0  # draft tokens EMITTED (accepted and not cut by
     #                         a stop token) — acceptance rate is
     #                         spec_accepted / spec_drafted
+    auto_prefix_hits: int = 0  # submits auto-attached to a detected shared
+    #                            prefix (Scheduler(auto_prefix=True))
     packed_ticks: int = 0  # token-packed calls dispatched (packed mode)
     packed_tokens: int = 0  # live tokens those calls carried
     packed_pad_tokens: int = 0  # tail-pad rows they carried (pad fraction
@@ -350,6 +353,16 @@ class Scheduler:
     (the default) disables speculation entirely, leaving every code path
     byte-identical to the non-speculative scheduler.
 
+    ``auto_prefix=True`` turns on AUTOMATIC prefix detection: a submit
+    with no explicit ``prefix_key`` is longest-common-prefix matched
+    against the last ``auto_prefix_window`` prompts and against already
+    auto-registered prefixes; a match of >= ``auto_prefix_min`` tokens
+    attaches the request to a shared prefix through the exact same CoW
+    fork machinery as an explicit key (:meth:`_detect_auto_prefix`) —
+    repeated system prompts share pages with zero caller cooperation.
+    Greedy streams are unchanged (prefix sharing is bit-exact);
+    ``stats.auto_prefix_hits`` counts the attachments.
+
     ``mesh=`` (a ``("kv", "model")`` mesh from
     ``launch.mesh.make_serving_mesh``) turns every tick MULTI-DEVICE: the
     pool's page axis is sharded over the mesh's "kv" axis
@@ -371,7 +384,8 @@ class Scheduler:
                  prefill_chunk: int | str | tuple = 256,
                  preempt_cooldown: int = 1, tick_mode: str | None = None,
                  token_budget: int | None = None, speculate_k: int = 0,
-                 telemetry=None, mesh=None):
+                 auto_prefix: bool = False, auto_prefix_min: int = 8,
+                 auto_prefix_window: int = 16, telemetry=None, mesh=None):
         if resume not in ("swap", "refill"):
             raise ValueError(f"resume must be 'swap' or 'refill', got {resume}")
         if prefill_mode not in ("chunked", "wave"):
@@ -432,12 +446,34 @@ class Scheduler:
         self._prefixes: dict = {}
         self._next_rid = 0
         self._admit_seq = 0
+        # automatic prefix detection (auto_prefix=True): submits with no
+        # explicit prefix_key are longest-common-prefix matched against the
+        # last `auto_prefix_window` prompts and against already-registered
+        # auto prefixes; a match of >= auto_prefix_min tokens mints/joins a
+        # shared prefix through the ordinary CoW fork machinery
+        self.auto_prefix = bool(auto_prefix)
+        self.auto_prefix_min = max(1, int(auto_prefix_min))
+        self._recent_reqs: deque = deque(maxlen=max(1, int(auto_prefix_window)))
+        self._auto_keys: set = set()
+        self._auto_seq = 0
         # per-token streaming events (rid, token_index, token) in emission
         # order, and rids finished since the last drain — both consumed by
         # serving.api.LLMServer; a long-lived driver reads the finished
-        # QUEUE instead of rescanning the whole results dict per tick
+        # QUEUE instead of rescanning the whole results dict per tick.
+        # THREAD MODEL: the scheduler is single-driver — submit/abort/step
+        # mutate pool and slot state and must all run on ONE thread (the
+        # async front end's tick thread marshals everything there; the
+        # step() re-entry guard below turns a violation into a loud
+        # RuntimeError instead of corrupted block tables). The two drain
+        # surfaces are the exception: _emit_lock makes event/finished
+        # APPENDS atomic with the drain swap, so drain_events() /
+        # drain_finished() may be called from any thread, each by a single
+        # consumer (a drained event exists exactly once — two competing
+        # consumers would each see a disjoint, useless half of the stream)
         self._events: list = []
         self._finished: list = []
+        self._emit_lock = threading.Lock()
+        self._step_guard = threading.Lock()
         # per-slot sampling operands, updated at admit/evict so every tick
         # ships the SAME (max_slots,)-shaped arrays — per-request sampling
         # without per-request compiles. Freed rows reset to greedy.
@@ -580,6 +616,8 @@ class Scheduler:
             priority = sampling.priority
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 1 and sampling.max_tokens >= 1
+        if prefix_key is None and self.auto_prefix:
+            prefix_key, prefix_len = self._detect_auto_prefix(prompt)
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, prompt, sampling.max_tokens, sampling.eos_id,
@@ -606,10 +644,66 @@ class Scheduler:
                             f"declared {plen}-token prefix does not match "
                             f"the registered {entry.tokens.size}-token one")
                 req.prefix_key = prefix_key
+        if self.auto_prefix:
+            self._recent_reqs.append(req)
         self.queue.append(req)
         if self.telemetry is not None:
             self.telemetry.request_submitted(rid)
         return rid
+
+    @staticmethod
+    def _lcp(a: np.ndarray, b: np.ndarray) -> int:
+        """Length of the longest common prefix of two token sequences."""
+        n = min(a.size, b.size)
+        neq = np.nonzero(a[:n] != b[:n])[0]
+        return int(neq[0]) if neq.size else n
+
+    def _detect_auto_prefix(self, prompt: np.ndarray) -> tuple:
+        """Automatic prefix detection (``auto_prefix=True``): find the
+        longest shared prefix of >= ``auto_prefix_min`` tokens between
+        this prompt and (a) any already-registered auto prefix or (b) any
+        of the last ``auto_prefix_window`` submitted prompts, and return
+        the ``(prefix_key, prefix_len)`` to attach with — HTTP clients
+        get CoW prefix-page sharing without ever naming a ``prefix_key``.
+
+        Matching an existing auto prefix simply joins it (the ordinary
+        fork path). A longer match against a RECENT raw prompt mints a
+        new auto key covering the common prefix; when that earlier
+        request is still QUEUED and keyless it is retroactively attached,
+        so the FIFO-first of the pair materializes the prefix and the
+        later one forks — first-pair sharing, not just third-request-on.
+        Both lengths are capped at each prompt's size - 1 (at least one
+        suffix token must prefill to produce first logits). Returns
+        ``(None, None)`` when nothing clears the threshold."""
+        best_key, best_len = None, 0
+        for key in self._auto_keys:
+            entry = self._prefixes.get(key)
+            if entry is None:
+                continue
+            plen = int(entry.tokens.size)
+            if (plen > best_len and plen <= prompt.size - 1
+                    and np.array_equal(entry.tokens, prompt[:plen])):
+                best_key, best_len = key, plen
+        best_req, best_req_len = None, best_len
+        for other in self._recent_reqs:
+            lcp = min(self._lcp(prompt, other.prompt),
+                      prompt.size - 1, other.prompt.size - 1)
+            if lcp > best_req_len:
+                best_req, best_req_len = other, lcp
+        if best_req is not None and best_req_len >= self.auto_prefix_min:
+            self._auto_seq += 1
+            key = ("auto_prefix", self._auto_seq)
+            self._auto_keys.add(key)
+            self._prefixes[key] = _PrefixEntry(
+                key, prompt[:best_req_len].copy())
+            if best_req.prefix_key is None and best_req in self.queue:
+                best_req.prefix_key = key  # FIFO-first becomes the creator
+            self.stats.auto_prefix_hits += 1
+            return key, best_req_len
+        if best_key is not None and best_len >= self.auto_prefix_min:
+            self.stats.auto_prefix_hits += 1
+            return best_key, best_len
+        return None, None
 
     def release_prefixes(self) -> None:
         """Release every pinned shared prefix (their pages return to the
@@ -627,6 +721,7 @@ class Scheduler:
             st.req.prefix_key for st in self.slots if st is not None}
         self._prefixes = {k: e for k, e in self._prefixes.items()
                           if k in live}
+        self._auto_keys &= set(self._prefixes)
 
     def abort(self, rid: int) -> bool:
         """Cancel a request wherever it currently is — queued (including
@@ -665,7 +760,7 @@ class Scheduler:
         self.results[req.rid] = np.concatenate(
             [req.prompt, np.asarray(generated, np.int32)])
         self.finish_reasons[req.rid] = "abort"
-        self._finished.append(req.rid)
+        self._mark_finished(req.rid)
         self.stats.aborted += 1
         if self.telemetry is not None:
             self.telemetry.request_finished(req.rid, track, "abort",
@@ -717,20 +812,41 @@ class Scheduler:
         if self.telemetry is not None:
             self.telemetry.request_submitted(req.rid)
 
+    def _emit_event(self, rid: int, idx: int, tok: int, lp: float) -> None:
+        """Append one streamed-token event atomically w.r.t. the drain
+        swap — the tick thread may be mid-step while another thread calls
+        ``drain_events``; without the lock an append racing the swap can
+        land in the already-drained list and vanish."""
+        with self._emit_lock:
+            self._events.append((rid, idx, tok, lp))
+
+    def _mark_finished(self, rid: int) -> None:
+        with self._emit_lock:
+            self._finished.append(rid)
+
     def drain_events(self) -> list:
         """Return and clear the per-token events emitted since the last
         call: ``(rid, token_index, token, logprob)`` tuples in emission
         order — position order per request, interleaved across requests.
         ``logprob`` is the token's log-probability under the row's raw
-        model distribution (``core.sampling.token_logprobs``)."""
-        ev, self._events = self._events, []
+        model distribution (``core.sampling.token_logprobs``).
+
+        SINGLE-CONSUMER: safe to call from a thread other than the one
+        driving ``step()`` (the swap is atomic with event appends), but
+        only ONE consumer may drain — each event is returned exactly once,
+        so two competing drainers would each see a useless interleaved
+        half of every request's stream."""
+        with self._emit_lock:
+            ev, self._events = self._events, []
         return ev
 
     def drain_finished(self) -> list:
         """Return and clear the rids that finished (evicted or aborted)
         since the last call — O(newly finished), however many results a
-        long-running scheduler retains."""
-        f, self._finished = self._finished, []
+        long-running scheduler retains. Same single-consumer contract as
+        :meth:`drain_events`."""
+        with self._emit_lock:
+            f, self._finished = self._finished, []
         return f
 
     # ------------------------------------------------------------ lifecycle
@@ -877,7 +993,7 @@ class Scheduler:
         a fresh sample) and record its TTFT."""
         if not st.generated:
             st.generated.append(token)
-            self._events.append((st.req.rid, 0, token, logprob))
+            self._emit_event(st.req.rid, 0, token, logprob)
             self.stats.ttft_ticks.setdefault(
                 st.req.rid, self._tick - st.req.submit_tick)
             if self.telemetry is not None:
@@ -1204,8 +1320,8 @@ class Scheduler:
         for j in range(n):
             tok = int(toks[j])
             st.generated.append(tok)
-            self._events.append((st.req.rid, len(st.generated) - 1, tok,
-                                 float(lps[j])))
+            self._emit_event(st.req.rid, len(st.generated) - 1, tok,
+                             float(lps[j]))
             emit += 1
             if tok in stop:
                 break
@@ -1316,8 +1432,8 @@ class Scheduler:
         for i in active:
             st = self.slots[i]
             st.generated.append(int(nxt[i]))
-            self._events.append((st.req.rid, len(st.generated) - 1,
-                                 int(nxt[i]), float(lps[i])))
+            self._emit_event(st.req.rid, len(st.generated) - 1,
+                             int(nxt[i]), float(lps[i]))
         self.stats.steps += 1
         self.stats.slot_ticks += len(active)
 
@@ -1422,8 +1538,8 @@ class Scheduler:
         for i in decode_rows:
             st = self.slots[i]
             st.generated.append(int(nxt[i]))
-            self._events.append((st.req.rid, len(st.generated) - 1,
-                                 int(nxt[i]), float(lps[i])))
+            self._emit_event(st.req.rid, len(st.generated) - 1,
+                             int(nxt[i]), float(lps[i]))
         self.stats.packed_ticks += 1
         self.stats.packed_tokens += cur
         self.stats.packed_pad_tokens += t_budget - cur
@@ -1443,7 +1559,7 @@ class Scheduler:
             self.results[st.req.rid] = np.concatenate(
                 [st.req.prompt, np.asarray(toks, np.int32)])
             self.finish_reasons[st.req.rid] = reason
-            self._finished.append(st.req.rid)
+            self._mark_finished(st.req.rid)
             self.pool.free(i)
             self.slots[i] = None
             self._reset_ops(i)
@@ -1495,7 +1611,25 @@ class Scheduler:
         :class:`~repro.serving.telemetry.TickRecord` (wall time, token/pad
         counts, compile events, pool occupancy, queue depth); the
         timeline is assembled from stat deltas, so the instrumented tick
-        runs the exact same scheduling decisions as the bare one."""
+        runs the exact same scheduling decisions as the bare one.
+
+        SINGLE-DRIVER: ticks mutate pool pages, block tables and slot
+        state with no internal locking — one thread must own them
+        (``serving.async_engine.AsyncLLMServer`` marshals every call onto
+        its tick thread). A second thread entering mid-tick raises
+        RuntimeError instead of silently corrupting the pool."""
+        if not self._step_guard.acquire(blocking=False):
+            raise RuntimeError(
+                "Scheduler.step() re-entered from another thread mid-tick: "
+                "the scheduler is single-driver — submit/abort/step must "
+                "all run on ONE thread (drain_events/drain_finished are "
+                "the only cross-thread-safe surfaces)")
+        try:
+            return self._step_guarded()
+        finally:
+            self._step_guard.release()
+
+    def _step_guarded(self) -> bool:
         tel = self.telemetry
         if tel is None:
             return self._step_inner()

@@ -1,0 +1,442 @@
+"""The async serving front end (``serving.async_engine`` +
+``serving.http``): concurrent HTTP/SSE streams bit-identical to the sync
+server, disconnect→abort frees pool pages, bounded admission returns 429,
+SSE framing round-trips, graceful shutdown drains, auto prefix detection
+parity, and the scheduler's cross-thread contracts (single-driver step
+guard, lossless concurrent event drains)."""
+
+import asyncio
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sampling import SamplingParams
+from repro.models.transformer import RuntimeOpts, init_params
+from repro.serving import Engine, LLMServer, Scheduler
+from repro.serving.async_engine import AdmissionError, AsyncLLMServer
+from repro.serving.http import ServingHTTPServer, SSEParser, sse_frame
+
+OPTS_Q = RuntimeOpts(q_chunk=16, kv_chunk=16, remat=False, quantized_kv=True,
+                     moe_capacity_factor=0.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama2-7b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _paged(cfg, params, **kw):
+    kw.setdefault("num_pages", 32)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_slots", 3)
+    return LLMServer(cfg, params, OPTS_Q, backend="paged", **kw)
+
+
+def _run(coro, timeout=120.0):
+    return asyncio.run(asyncio.wait_for(coro, timeout))
+
+
+# ------------------------------------------------- raw HTTP test client
+
+
+async def _open(host, port, method, path, body=None):
+    reader, writer = await asyncio.open_connection(host, port)
+    payload = b"" if body is None else json.dumps(body).encode()
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: {host}\r\n"
+                  f"Content-Type: application/json\r\n"
+                  f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                 + payload)
+    await writer.drain()
+    status = await reader.readline()
+    code = int(status.split()[1])
+    headers = {}
+    while (h := await reader.readline()) not in (b"\r\n", b"\n", b""):
+        k, _, v = h.decode().partition(":")
+        headers[k.strip().lower()] = v.strip()
+    return reader, writer, code, headers
+
+
+async def _request_json(host, port, method, path, body=None):
+    reader, writer, code, headers = await _open(host, port, method, path,
+                                                body)
+    raw = await reader.read()  # Connection: close — EOF-terminated
+    writer.close()
+    return code, headers, json.loads(raw) if raw else None
+
+
+async def _stream_completion(host, port, body):
+    """POST a streaming completion; returns (code, headers, messages) with
+    messages = parsed SSE payloads up to and including "[DONE]"."""
+    reader, writer, code, headers = await _open(
+        host, port, "POST", "/v1/completions", dict(body, stream=True))
+    msgs, parser = [], SSEParser()
+    if code == 200:
+        while True:
+            chunk = await reader.read(4096)
+            if not chunk:
+                break
+            msgs += parser.feed(chunk)
+            if msgs and msgs[-1] == "[DONE]":
+                break
+    writer.close()
+    return code, headers, msgs
+
+
+def _tokens_of(msgs):
+    return [m["token"] for m in msgs
+            if m != "[DONE]" and not m.get("finished")]
+
+
+async def _boot(cfg, params, *, max_queue_depth=64, **server_kw):
+    engine = AsyncLLMServer(_paged(cfg, params, **server_kw),
+                            max_queue_depth=max_queue_depth)
+    http = ServingHTTPServer(engine)
+    await http.start()
+    return http, engine
+
+
+# ------------------------------------------- concurrent HTTP bit-parity
+
+
+def test_eight_concurrent_http_streams_bit_identical(tiny_model):
+    """The acceptance bar: 8 concurrent clients over real HTTP (with
+    auto_prefix sharing on) stream greedy tokens bit-identical to the
+    per-request Engine oracle, and the finish metadata survives SSE."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, (10,))
+    prompts = []
+    for i in range(8):  # half share a 10-token head: auto_prefix forks
+        tail = rng.integers(0, cfg.vocab_size, (3 + i % 3,))
+        prompts.append(np.concatenate([shared, tail]) if i % 2 == 0
+                       else rng.integers(0, cfg.vocab_size, (5 + i % 4,)))
+    max_tokens = [4 + i % 4 for i in range(8)]
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    want = [eng.generate(p[None], mt).tokens[0, p.shape[0]:]
+            for p, mt in zip(prompts, max_tokens)]
+
+    async def go():
+        http, engine = await _boot(cfg, params, auto_prefix=True)
+        try:
+            outs = await asyncio.gather(*[
+                _stream_completion(http.host, http.port,
+                                   {"prompt": p.tolist(), "max_tokens": mt})
+                for p, mt in zip(prompts, max_tokens)])
+        finally:
+            await http.stop()
+        return outs, engine
+
+    outs, engine = _run(go())
+    for (code, _, msgs), w in zip(outs, want):
+        assert code == 200
+        np.testing.assert_array_equal(_tokens_of(msgs), w)
+        fin = [m for m in msgs if m != "[DONE]" and m.get("finished")]
+        assert len(fin) == 1 and fin[0]["finish_reason"] == "length"
+        assert msgs[-1] == "[DONE]"
+        assert all(np.isfinite(m["logprob"]) for m in msgs
+                   if m != "[DONE]" and not m.get("finished"))
+    sched = engine.server.backend.scheduler
+    assert sched.stats.auto_prefix_hits >= 1
+    assert sched.pool.gauges()["pages_in_use"] == 0
+
+
+def test_nonstream_completion_and_metrics_endpoint(tiny_model):
+    cfg, params = tiny_model
+    rng = np.random.default_rng(1)
+    p = rng.integers(0, cfg.vocab_size, (6,))
+    want = Engine(cfg, params, OPTS_Q, cache_len=32).generate(
+        p[None], 5).tokens[0, 6:]
+
+    async def go():
+        http, _ = await _boot(cfg, params)
+        try:
+            code, _, body = await _request_json(
+                http.host, http.port, "POST", "/v1/completions",
+                {"prompt": p.tolist(), "max_tokens": 5})
+            hcode, _, health = await _request_json(
+                http.host, http.port, "GET", "/healthz")
+            mcode, _, metrics = await _request_json(
+                http.host, http.port, "GET", "/v1/metrics")
+            ncode, _, _ = await _request_json(
+                http.host, http.port, "GET", "/nope")
+        finally:
+            await http.stop()
+        return code, body, hcode, health, mcode, metrics, ncode
+
+    code, body, hcode, health, mcode, metrics, ncode = _run(go())
+    assert code == 200 and hcode == 200 and mcode == 200 and ncode == 404
+    np.testing.assert_array_equal(body["tokens"], want)
+    assert body["finish_reason"] == "length"
+    assert len(body["logprobs"]) == len(body["tokens"])
+    assert body["metrics"]["ttft_s"] > 0 and body["metrics"]["e2e_s"] > 0
+    assert health["status"] == "ok"
+    # the tick-thread-stamped SLO surface, correct with telemetry=None
+    assert metrics["requests.e2e_s.count"] == 1
+    assert metrics["requests.tpot_s.count"] == 1
+    assert metrics["requests.ttft_s.p50"] > 0
+    assert metrics["requests.reason.length"] == 1
+
+
+# ------------------------------------------------- disconnect → no leak
+
+
+def test_midstream_disconnect_frees_pool_pages(tiny_model):
+    """A client that vanishes after one token must abort its request and
+    leave ZERO pages in use once the scheduler settles."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab_size, (8,))
+
+    async def go():
+        http, engine = await _boot(cfg, params)
+        try:
+            reader, writer, code, _ = await _open(
+                http.host, http.port, "POST", "/v1/completions",
+                {"prompt": p.tolist(), "max_tokens": 32, "stream": True})
+            assert code == 200
+            parser, got = SSEParser(), []
+            while not got:  # first token arrived ⇒ request holds pages
+                got += parser.feed(await reader.read(4096))
+            writer.close()  # hang up mid-stream, no abort RPC
+            await writer.wait_closed()
+            sched = engine.server.backend.scheduler
+            for _ in range(500):
+                if not engine.server.pending and \
+                        sched.pool.gauges()["pages_in_use"] == 0:
+                    break
+                await asyncio.sleep(0.01)
+            gauges = sched.pool.gauges()
+            out = await engine.result(
+                next(iter(engine.server.outputs())))
+        finally:
+            await http.stop()
+        return gauges, out
+
+    gauges, out = _run(go())
+    assert gauges["pages_in_use"] == 0 and gauges["pages_shared"] == 0
+    assert out.finish_reason == "abort"
+    assert out.metrics.e2e_s is not None  # aborts are stamped too
+
+
+# ---------------------------------------------------- 429 backpressure
+
+
+def test_backpressure_returns_429(tiny_model):
+    """max_slots=1 + max_queue_depth=1: A streams (holds the slot), B
+    queues, C must bounce with 429 + Retry-After instead of queuing
+    without bound."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(3)
+    pa, pb, pc = (rng.integers(0, cfg.vocab_size, (5,)) for _ in range(3))
+
+    async def go():
+        http, engine = await _boot(cfg, params, max_slots=1,
+                                   max_queue_depth=1)
+        try:
+            ra, wa, code_a, _ = await _open(
+                http.host, http.port, "POST", "/v1/completions",
+                {"prompt": pa.tolist(), "max_tokens": 24, "stream": True})
+            assert code_a == 200
+            parser, got = SSEParser(), []
+            while not got:  # A is admitted and decoding
+                got += parser.feed(await ra.read(4096))
+            b_task = asyncio.ensure_future(_request_json(
+                http.host, http.port, "POST", "/v1/completions",
+                {"prompt": pb.tolist(), "max_tokens": 2}))
+            for _ in range(500):  # B accepted → scheduler queue depth 1
+                _, _, health = await _request_json(
+                    http.host, http.port, "GET", "/healthz")
+                if health["queue_depth"] >= 1:
+                    break
+                await asyncio.sleep(0.01)
+            assert health["queue_depth"] == 1
+            code_c, headers_c, body_c = await _request_json(
+                http.host, http.port, "POST", "/v1/completions",
+                {"prompt": pc.tolist(), "max_tokens": 2})
+            while got[-1] != "[DONE]":  # drain A; slot frees for B
+                got += parser.feed(await ra.read(4096))
+            wa.close()
+            code_b, _, body_b = await b_task
+        finally:
+            await http.stop()
+        return code_c, headers_c, body_c, code_b, body_b
+
+    code_c, headers_c, body_c, code_b, body_b = _run(go())
+    assert code_c == 429
+    assert headers_c.get("retry-after") == "1"
+    assert "admission queue full" in body_c["error"]
+    assert code_b == 200 and len(body_b["tokens"]) == 2
+
+
+# --------------------------------------------------------- SSE framing
+
+
+def test_sse_framing_round_trips():
+    msgs = [{"rid": 7, "index": i, "token": i * 3, "logprob": -0.25 * i}
+            for i in range(5)]
+    msgs.append({"rid": 7, "index": 5, "token": -1, "finished": True,
+                 "finish_reason": "stop"})
+    wire = b"".join(sse_frame(m) for m in msgs) + b"data: [DONE]\n\n"
+    # every chunking of the byte stream decodes to the same payloads
+    for size in (1, 2, 3, 7, len(wire)):
+        parser, got = SSEParser(), []
+        for i in range(0, len(wire), size):
+            got += parser.feed(wire[i: i + size])
+        assert got == msgs + ["[DONE]"]
+
+
+# ----------------------------------------------------------- shutdown
+
+
+def test_graceful_shutdown_drains_inflight(tiny_model):
+    cfg, params = tiny_model
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, (5 + i,)) for i in range(2)]
+    eng = Engine(cfg, params, OPTS_Q, cache_len=32)
+    want = [eng.generate(p[None], 6).tokens[0, p.shape[0]:]
+            for p in prompts]
+
+    async def go():
+        engine = AsyncLLMServer(_paged(cfg, params))
+        rids = [await engine.submit(p, SamplingParams(max_tokens=6))
+                for p in prompts]
+        streams = [asyncio.ensure_future(_collect(engine, r)) for r in rids]
+        await engine.shutdown(drain=True)  # must NOT cut the streams
+        events = await asyncio.gather(*streams)
+        with pytest.raises(Exception) as ei:
+            await engine.submit(prompts[0], SamplingParams(max_tokens=2))
+        return events, ei.value
+
+    async def _collect(engine, rid):
+        return [ev async for ev in engine.stream(rid)]
+
+    events, err = _run(go())
+    for evs, w in zip(events, want):
+        assert evs[-1].finished and evs[-1].finish_reason == "length"
+        np.testing.assert_array_equal([e.token for e in evs[:-1]], w)
+    assert "shut down" in str(err)
+
+
+def test_shutdown_now_aborts_inflight(tiny_model):
+    cfg, params = tiny_model
+    p = np.random.default_rng(5).integers(0, cfg.vocab_size, (6,))
+
+    async def go():
+        engine = AsyncLLMServer(_paged(cfg, params))
+        rid = await engine.submit(p, SamplingParams(max_tokens=64))
+        agen = engine.stream(rid)
+        first = await agen.__anext__()  # admitted and producing
+        await engine.shutdown(drain=False)
+        evs = [ev async for ev in agen]  # abort marker still flushes
+        out = await engine.result(rid)
+        return first, evs, out
+
+    first, evs, out = _run(go())
+    assert not first.finished
+    assert evs[-1].finished and evs[-1].finish_reason == "abort"
+    assert out.finish_reason == "abort"
+
+
+def test_admission_error_direct(tiny_model):
+    """Bounded admission at the engine API level (no HTTP): the check and
+    the submit are atomic on the tick thread."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(6)
+
+    async def go():
+        engine = AsyncLLMServer(_paged(cfg, params, max_slots=1),
+                                max_queue_depth=1)
+        r1 = await engine.submit(rng.integers(0, 64, (5,)),
+                                 SamplingParams(max_tokens=16))
+        agen = engine.stream(r1)
+        await agen.__anext__()  # r1 admitted: slot busy, queue empty
+        await engine.submit(rng.integers(0, 64, (5,)),
+                            SamplingParams(max_tokens=2))  # queues
+        with pytest.raises(AdmissionError):
+            await engine.submit(rng.integers(0, 64, (5,)),
+                                SamplingParams(max_tokens=2))
+        async for _ in agen:
+            pass
+        await engine.shutdown()
+
+    _run(go())
+
+
+# ------------------------------------------- scheduler thread contracts
+
+
+def test_step_guard_rejects_second_driver(tiny_model):
+    """Scheduler.step() is single-driver: a second thread calling step()
+    mid-tick gets a hard RuntimeError, not a silent data race."""
+    cfg, params = tiny_model
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=8, page_size=4,
+                      max_slots=2)
+    sched.submit(np.arange(4, dtype=np.int32), 2)
+    assert sched._step_guard.acquire(blocking=False)  # a tick in flight
+    try:
+        with pytest.raises(RuntimeError, match="single-driver"):
+            sched.step()
+    finally:
+        sched._step_guard.release()
+    sched.run()  # guard released: normal drive still works
+
+
+def test_concurrent_event_drain_loses_nothing(tiny_model):
+    """drain_events() swaps under the emit lock: a producer hammering
+    _emit_event from another thread never loses an event to the
+    load/store interleave."""
+    cfg, params = tiny_model
+    sched = Scheduler(cfg, params, OPTS_Q, num_pages=8, page_size=4,
+                      max_slots=2)
+    n = 20000
+    done = threading.Event()
+
+    def produce():
+        for i in range(n):
+            sched._emit_event(1, i, i % 64, -0.5)
+        done.set()
+
+    t = threading.Thread(target=produce)
+    t.start()
+    got = []
+    while not (done.is_set() and not sched._events):
+        got += sched.drain_events()
+    t.join()
+    got += sched.drain_events()
+    assert [e[1] for e in got] == list(range(n))
+
+
+# ------------------------------------------------- auto prefix detection
+
+
+def test_auto_prefix_detection_parity_and_forks(tiny_model):
+    """auto_prefix=True: prompts sharing a long head get CoW page sharing
+    with NO explicit prefix_key — and stay bit-identical to the plain
+    scheduler."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, (12,))
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, (2 + i,))])
+               for i in range(3)]
+    prompts.append(rng.integers(0, cfg.vocab_size, (6,)))  # no shared head
+
+    def drain(**kw):
+        sched = Scheduler(cfg, params, OPTS_Q, num_pages=32, page_size=4,
+                          max_slots=4, **kw)
+        rids = [sched.submit(p, 4) for p in prompts]
+        results = sched.run()
+        return [results[r] for r in rids], sched.stats
+
+    plain, _ = drain()
+    auto, stats = drain(auto_prefix=True)
+    for a, b in zip(plain, auto):
+        np.testing.assert_array_equal(a, b)
+    assert stats.auto_prefix_hits >= 2  # prompts 1 and 2 match prompt 0
+    assert stats.prefix_forks >= 1  # at least one CoW fork attached

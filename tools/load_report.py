@@ -1,0 +1,147 @@
+"""load-report: render + validate a load_serving artifact (the CI
+load-smoke gate — ``tools/trace_report.py``'s sibling for the HTTP
+service layer).
+
+  python tools/load_report.py experiments/load_serving/load_serving_smoke.json \
+      [--min-completed N] [--min-tokens-per-s X] [--max-ttft-p99-s X]
+
+Reads the JSON ``benchmarks/load_serving.py`` writes and prints the
+client-vs-server SLO table; then validates (exit code 1 on failure):
+
+  * structure: ``client`` / ``server_metrics`` / ``config`` sections
+    present, percentile dicts well-formed (p50 <= p95 <= p99);
+  * progress: at least ``--min-completed`` streams ran to ``[DONE]`` and
+    achieved tokens/s clears ``--min-tokens-per-s``;
+  * server-side accounting: the ``/v1/metrics`` histograms saw every
+    finished request (``requests.e2e_s.count`` >= client completions)
+    and every client hang-up shows up as an abort
+    (``requests.reason.abort`` >= client aborts);
+  * **no leak**: when the artifact carries a ``pool`` section (in-process
+    run), ``pages_in_use`` and ``pages_shared`` are both 0 after the
+    drain — a mid-stream disconnect that pins pages fails CI here;
+  * latency sanity: client TTFT p99 under ``--max-ttft-p99-s`` when set.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _check_pcts(d: dict, name: str, problems: list) -> None:
+    have = [d[q] for q in ("p50", "p95", "p99") if q in d]
+    if len(have) != 3:
+        problems.append(f"{name}: incomplete percentile dict {sorted(d)}")
+    elif not have[0] <= have[1] <= have[2]:
+        problems.append(f"{name}: percentiles not monotone: {have}")
+
+
+def validate(rec: dict, min_completed: int = 1,
+             min_tokens_per_s: float = 0.0,
+             max_ttft_p99_s: float | None = None) -> list:
+    problems = []
+    for section in ("config", "client", "server_metrics"):
+        if section not in rec:
+            problems.append(f"missing {section!r} section")
+    if problems:
+        return problems
+    c, sm = rec["client"], rec["server_metrics"]
+    if c.get("completed", 0) < min_completed:
+        problems.append(f"expected >= {min_completed} completed streams, "
+                        f"got {c.get('completed')}")
+    if c.get("tokens_per_s", 0.0) < min_tokens_per_s:
+        problems.append(f"achieved {c.get('tokens_per_s')} tok/s < floor "
+                        f"{min_tokens_per_s}")
+    for key in ("ttft_s", "e2e_s"):
+        if c.get("completed", 0) > 0:
+            _check_pcts(c.get(key, {}), f"client.{key}", problems)
+    if max_ttft_p99_s is not None and \
+            c.get("ttft_s", {}).get("p99", 0.0) > max_ttft_p99_s:
+        problems.append(f"client TTFT p99 {c['ttft_s']['p99']}s over the "
+                        f"{max_ttft_p99_s}s gate")
+    n_srv = sm.get("requests.e2e_s.count", 0)
+    if n_srv < c.get("completed", 0):
+        problems.append(f"server e2e histogram saw {n_srv} requests but "
+                        f"{c['completed']} clients completed — tick-thread "
+                        f"metric stamping is dropping requests")
+    if sm.get("requests.reason.abort", 0) < c.get("client_aborts", 0):
+        problems.append(f"{c['client_aborts']} clients hung up but server "
+                        f"recorded {sm.get('requests.reason.abort', 0)} "
+                        f"aborts — disconnect→abort path is broken")
+    pool = rec.get("pool")
+    if pool is not None:
+        for g in ("pages_in_use", "pages_shared"):
+            if pool.get(g, 0) != 0:
+                problems.append(f"LEAK: pool gauge {g} = {pool[g]} after "
+                                f"drain (expected 0)")
+    return problems
+
+
+def report(rec: dict, out=sys.stdout) -> None:
+    w = out.write
+    cfg, c = rec.get("config", {}), rec.get("client", {})
+    w(f"== load ==\n  requests={cfg.get('requests')} "
+      f"rate={cfg.get('rate_req_per_s')}/s "
+      f"abort_fraction={cfg.get('abort_fraction')} "
+      f"smoke={cfg.get('smoke')}\n")
+    w(f"== client ==\n  completed={c.get('completed')} "
+      f"aborts={c.get('client_aborts')} rejected={c.get('rejected')} "
+      f"tokens={c.get('tokens_streamed')} tok/s={c.get('tokens_per_s')}\n")
+    for key in ("ttft_s", "e2e_s"):
+        p = c.get(key, {})
+        if p:
+            w(f"  {key:<8} p50={p.get('p50')} p95={p.get('p95')} "
+              f"p99={p.get('p99')}\n")
+    sm = rec.get("server_metrics", {})
+    w("== server (/v1/metrics) ==\n")
+    for row in ("requests.ttft_s", "requests.tpot_s", "requests.e2e_s"):
+        if f"{row}.count" in sm:
+            w(f"  {row:<18} n={sm[f'{row}.count']:<5} "
+              f"p50={sm.get(f'{row}.p50', 0):.6f} "
+              f"p99={sm.get(f'{row}.p99', 0):.6f}\n")
+    for k in sorted(sm):
+        if k.startswith("requests.reason.") or k == "requests.retained":
+            w(f"  {k} = {sm[k]}\n")
+    if "pool" in rec:
+        g = rec["pool"]
+        w(f"== pool (post-drain) ==\n  pages_in_use={g.get('pages_in_use')}"
+          f" pages_shared={g.get('pages_shared')} "
+          f"pages_free={g.get('pages_free')}\n")
+    if "scheduler" in rec:
+        s = rec["scheduler"]
+        w(f"== prefix sharing ==\n  auto_prefix_hits="
+          f"{s.get('auto_prefix_hits')} prefix_forks="
+          f"{s.get('prefix_forks')}\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="JSON from benchmarks/load_serving.py")
+    ap.add_argument("--min-completed", type=int, default=1)
+    ap.add_argument("--min-tokens-per-s", type=float, default=0.0)
+    ap.add_argument("--max-ttft-p99-s", type=float, default=None)
+    args = ap.parse_args(argv)
+    try:
+        with open(args.artifact) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"load-report: cannot load {args.artifact}: {e}",
+              file=sys.stderr)
+        return 1
+    report(rec)
+    problems = validate(rec, min_completed=args.min_completed,
+                        min_tokens_per_s=args.min_tokens_per_s,
+                        max_ttft_p99_s=args.max_ttft_p99_s)
+    if problems:
+        print("load-report: VALIDATION FAILED", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    print(f"load-report: OK ({rec['client']['completed']} completed, "
+          f"{rec['client']['tokens_per_s']} tok/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
